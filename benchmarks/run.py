@@ -1,0 +1,52 @@
+"""Benchmark driver: one section per paper table/figure.
+
+  Table 2 -> bench_materialisation  (AX vs REW work/triples factors)
+  Table 3 -> bench_scaling          (wall times across shard counts)
+  §5      -> bench_sparql           (query answering on T vs T^rho)
+  kernels -> bench_kernels          (Pallas interpret-mode vs jnp oracle)
+
+``python -m benchmarks.run [section ...]`` — default: all sections.
+"""
+
+from __future__ import annotations
+
+import sys
+import time
+
+
+def main() -> None:
+    sections = sys.argv[1:] or ["materialisation", "scaling", "sparql", "kernels"]
+    t0 = time.time()
+    if "materialisation" in sections:
+        print("=" * 72)
+        print("Table 2 analogue: AX vs REW (data/generator.py profiles)")
+        print("=" * 72)
+        from benchmarks import bench_materialisation
+
+        bench_materialisation.main()
+    if "scaling" in sections:
+        print("=" * 72)
+        print("Table 3 analogue: wall time vs shard count (subprocesses)")
+        print("=" * 72)
+        from benchmarks import bench_scaling
+
+        bench_scaling.main()
+    if "sparql" in sections:
+        print("=" * 72)
+        print("§5 analogue: SPARQL on rewritten vs expanded triples")
+        print("=" * 72)
+        from benchmarks import bench_sparql
+
+        bench_sparql.main()
+    if "kernels" in sections:
+        print("=" * 72)
+        print("Pallas kernels (interpret mode) vs jnp oracle")
+        print("=" * 72)
+        from benchmarks import bench_kernels
+
+        bench_kernels.main()
+    print(f"\n[benchmarks] total {time.time() - t0:.1f}s")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,76 @@
+"""End-to-end driver: materialise a KG and answer SPARQL over it.
+
+This is the paper-kind equivalent of "train a model end-to-end": generate a
+clique-injected KG (default: the OpenCyc-like equality-dense profile), run
+the full REW materialisation, validate Theorem 1 against the AX oracle, then
+answer SPARQL queries on the succinct store with bag-correct multiplicities.
+
+Run:  PYTHONPATH=src python examples/materialise_kg.py [--profile claros_like]
+      PYTHONPATH=src python examples/materialise_kg.py --spmd 4   # 4-shard SPMD
+"""
+
+import argparse
+import time
+
+from repro.core.materialise import check_theorem1, materialise
+from repro.data.generator import PROFILES, generate
+from repro.sparql import Query, evaluate
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--profile", default="opencyc_like", choices=sorted(PROFILES))
+    ap.add_argument("--spmd", type=int, default=0,
+                    help="run the JAX SPMD engine over N fake devices instead")
+    ap.add_argument("--skip-ax", action="store_true")
+    args = ap.parse_args()
+
+    facts, program, dic = generate(**PROFILES[args.profile])
+    print(f"[{args.profile}] {facts.shape[0]} facts, {len(program)} rules, "
+          f"{dic.n_resources} resources")
+
+    if args.spmd:
+        import jax
+
+        from repro.core.engine_jax import JaxEngine
+
+        mesh = jax.make_mesh((args.spmd,), ("data",),
+                             axis_types=(jax.sharding.AxisType.Auto,))
+        eng = JaxEngine(dic.n_resources, capacity=(1 << 17) // args.spmd,
+                        bind_cap=1 << 14, out_cap=1 << 14, rewrite_cap=1 << 14,
+                        mesh=mesh)
+        t0 = time.time()
+        spo, rep, stats = eng.materialise(facts, program)
+        print(f"SPMD({args.spmd} shards): {spo.shape[0]} triples, "
+              f"{stats.derivations} derivations, {time.time()-t0:.2f}s")
+        return
+
+    t0 = time.time()
+    rew = materialise(facts, program, dic.n_resources, mode="REW")
+    t_rew = time.time() - t0
+    print(f"REW: {rew.stats.triples_unmarked} triples, "
+          f"{rew.stats.derivations} derivations, "
+          f"{rew.stats.merged_resources} merged, {t_rew:.2f}s")
+
+    if not args.skip_ax:
+        t0 = time.time()
+        ax = materialise(facts, program, dic.n_resources, mode="AX")
+        t_ax = time.time() - t0
+        print(f"AX : {ax.stats.triples_unmarked} triples, "
+              f"{ax.stats.derivations} derivations, {t_ax:.2f}s "
+              f"-> REW is {t_ax / max(t_rew, 1e-9):.1f}x faster")
+        check_theorem1(rew, ax)
+        print("Theorem 1 validated (T^rho == AX materialisation)")
+
+    q = Query.parse("SELECT ?x WHERE { (?x, :spoke, ?y) }", dic)
+    t0 = time.time()
+    ans = evaluate(q, rew.triples(), rew.rep, dic)
+    print(f"\nSPARQL over T (bag semantics): {sum(ans.values())} answers, "
+          f"{len(ans)} distinct, {1e3*(time.time()-t0):.1f}ms")
+    top = ans.most_common(3)
+    for row, count in top:
+        print(f"   {row} x{count}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,58 @@
+"""Quickstart: the paper's running example (§3/§4, Table 1).
+
+Materialises P_ex = {(R), (S), F1..F3} about :Obama / :USPresident /
+:USA / :US / :America with explicit owl:sameAs axiomatisation (AX) and with
+rewriting (REW), and prints the numbers the paper quotes: >60 derivations
+under AX vs 6 under REW, a 3-triple final store, and the representative map.
+
+Run:  PYTHONPATH=src python examples/quickstart.py
+"""
+
+import numpy as np
+
+from repro.core.materialise import check_theorem1, expand, materialise
+from repro.data.datasets import pex
+
+
+def name_triples(triples, dic):
+    return sorted(
+        f"<{dic.lookup(s)}, {dic.lookup(p)}, {dic.lookup(o)}>" for s, p, o in triples
+    )
+
+
+def main():
+    facts, program, dic = pex()
+    print("Input facts:")
+    for row in name_triples(facts, dic):
+        print("  ", row)
+
+    ax = materialise(facts, program, dic.n_resources, mode="AX")
+    rew = materialise(facts, program, dic.n_resources, mode="REW")
+    check_theorem1(rew, ax)  # Theorem 1 (1)-(3) + expansion == AX
+
+    print("\nAX  (explicit ~=1..~=5 axiomatisation):")
+    print(f"   triples: {ax.stats.triples_unmarked}")
+    print(f"   derivations: {ax.stats.derivations}   (paper: >60 for sameAs alone)")
+
+    print("\nREW (the paper's rewriting algorithm):")
+    print(f"   triples (unmarked): {rew.stats.triples_unmarked}")
+    print(f"   derivations: {rew.stats.derivations}   (paper: 6)")
+    print(f"   merged resources: {rew.stats.merged_resources}")
+    print("   final store:")
+    for row in name_triples(rew.triples(), dic):
+        print("     ", row)
+
+    print("\nRepresentative map (non-identity):")
+    for rid in range(dic.n_resources):
+        rep = int(rew.rep[rid])
+        if rep != rid:
+            print(f"   rho({dic.lookup(rid)}) = {dic.lookup(rep)}")
+
+    exp = expand(rew.triples(), rew.rep)
+    ax_set = {tuple(t) for t in ax.triples()}
+    print(f"\nTheorem 1(3): |T^rho| = {len(exp)} == |AX| = {len(ax_set)}:",
+          exp == ax_set)
+
+
+if __name__ == "__main__":
+    main()

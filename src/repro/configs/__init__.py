@@ -1,0 +1,44 @@
+"""Architecture registry: one module per assigned architecture.
+
+``get_arch(name)`` returns the ArchSpec; ``all_archs()`` lists them in the
+assignment order (plus ``sameas_rew`` — the paper's own engine workload).
+"""
+
+from __future__ import annotations
+
+from .base import ArchSpec
+
+_ARCH_MODULES = [
+    "qwen3_moe_235b",
+    "deepseek_moe_16b",
+    "qwen2_1p5b",
+    "smollm_135m",
+    "starcoder2_15b",
+    "dimenet",
+    "egnn",
+    "gatedgcn",
+    "pna",
+    "fm",
+    "sameas_rew",
+]
+
+
+_ALIASES = {
+    "qwen3-moe-235b-a22b": "qwen3_moe_235b",
+    "deepseek-moe-16b": "deepseek_moe_16b",
+    "qwen2-1.5b": "qwen2_1p5b",
+    "smollm-135m": "smollm_135m",
+    "starcoder2-15b": "starcoder2_15b",
+}
+
+
+def get_arch(name: str) -> ArchSpec:
+    import importlib
+
+    module = _ALIASES.get(name, name.replace("-", "_").replace(".", "p"))
+    mod = importlib.import_module(f"repro.configs.{module}")
+    return mod.SPEC
+
+
+def all_archs() -> list[str]:
+    return list(_ARCH_MODULES)

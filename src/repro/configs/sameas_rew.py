@@ -1,0 +1,50 @@
+"""sameas_rew — the paper's own workload as a dry-run architecture.
+
+One SPMD materialisation round (process_candidates + a representative
+two-atom join plan) lowered on the production mesh, with the triple arena
+sharded over (pod x data) and rho replicated.  Dims are per-DEVICE
+capacities; the global arena is capacity x n_devices triples.
+"""
+
+import dataclasses
+
+from .base import ArchSpec, ShapeSpec
+
+
+@dataclasses.dataclass(frozen=True)
+class EngineConfig:
+    name: str = "sameas_rew"
+    n_resources: int = 1 << 20
+    capacity: int = 1 << 18        # per-device arena rows
+    bind_cap: int = 1 << 14
+    out_cap: int = 1 << 14
+    rewrite_cap: int = 1 << 14
+    # owner-routing bucket rows per destination shard (None = all-gather)
+    route_cap: int | None = 1 << 12
+
+
+CONFIG = EngineConfig()
+REDUCED = EngineConfig(
+    name="sameas_rew-reduced",
+    n_resources=1 << 10,
+    capacity=256,
+    bind_cap=256,
+    out_cap=256,
+    rewrite_cap=256,
+    route_cap=64,
+)
+
+SHAPES = (
+    # global arena = capacity x 256 (single pod) / x 512 (multi-pod)
+    ShapeSpec("round_67m", "engine", dict(capacity=1 << 18, n_resources=1 << 20)),
+    ShapeSpec("round_268m", "engine", dict(capacity=1 << 20, n_resources=1 << 21)),
+)
+
+SPEC = ArchSpec(
+    name="sameas_rew",
+    family="engine",
+    config=CONFIG,
+    reduced=REDUCED,
+    shapes=SHAPES,
+    source="this paper",
+)

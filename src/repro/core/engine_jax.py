@@ -1,0 +1,666 @@
+"""Fixed-capacity JAX materialisation engine (REW mode) — the production path.
+
+The numpy engine in :mod:`repro.core.seminaive` is the flexible reference
+oracle; this module is the TPU-shaped implementation: every buffer has a
+static capacity, every step is a pure jittable function, and the same round
+body runs single-device or SPMD under ``shard_map`` (pass ``mesh=``).
+
+Design (DESIGN.md §2):
+  * store  = arena ``spo (CAP,3) int32`` + ``epoch (CAP,) int32`` (-1 = free,
+    else the round the fact was inserted) + ``marked (CAP,) bool`` (the
+    paper's outdated bit; marked facts are skipped by matching but retained),
+  * delta discipline via epochs: round r matches Delta = (epoch == r-1),
+    T_old = (epoch <= r-2), T_all = (epoch <= r-1),
+  * joins  = sort + searchsorted over packed int64 keys with static output
+    capacities and overflow flags (host retries with doubled capacity),
+  * rho    = replicated representative array; merges via
+    :func:`repro.core.uf.merge_pairs_jax` (min-hooking + pointer doubling),
+  * rule rewriting happens on the host at the round barrier; rule *constants*
+    are traced arguments, so rewriting a rule never re-traces its plan.
+
+Distribution (the paper's N threads -> mesh ``data`` axis):
+  * the arena is sharded by rows; a fact lives on shard ``subject % D``,
+  * plan evaluation joins replicated bindings against the local shard and
+    ``all_gather``s bindings between atoms (new sameAs pairs and candidate
+    heads are few relative to the store — the paper's own observation),
+  * rho is replicated and updated identically on every shard (min-hooking is
+    order-independent, so no coordination is needed — the paper needed CAS),
+  * candidate facts and sweep rewrites are re-routed to their owner shard by
+    the gather + ownership filter (the all_to_all analogue),
+  * convergence flags are psum'd.
+
+Everything runs inside an ``enable_x64`` scope because packed triple keys
+need 63 bits; inputs/outputs stay int32.
+"""
+
+from __future__ import annotations
+
+import warnings
+from dataclasses import dataclass
+from functools import partial
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from .rules import Program, Rule
+from .stats import MatStats
+from .terms import DIFFERENT_FROM, SAME_AS, is_var
+from .uf import compress_np, merge_pairs_jax
+
+with warnings.catch_warnings():
+    warnings.simplefilter("ignore", DeprecationWarning)
+    from jax.experimental import enable_x64
+
+I32 = jnp.int32
+# numpy scalar (not jnp): module import happens outside the enable_x64 scope
+KEY_MAX = np.int64((1 << 63) - 1)  # > any packed key (IDs <= MAX_ID)
+
+# epoch predicates for matching
+PRED_OLD, PRED_DELTA, PRED_ALL = 0, 1, 2
+
+
+def _pack3(spo: jnp.ndarray) -> jnp.ndarray:
+    s = spo[..., 0].astype(jnp.int64)
+    p = spo[..., 1].astype(jnp.int64)
+    o = spo[..., 2].astype(jnp.int64)
+    return (s << 42) | (p << 21) | o
+
+
+def _pack_cols(cols: list[jnp.ndarray]) -> jnp.ndarray:
+    key = jnp.zeros(cols[0].shape, dtype=jnp.int64)
+    for c in cols:
+        key = (key << 21) | c.astype(jnp.int64)
+    return key
+
+
+def _epoch_ok(epoch: jnp.ndarray, marked: jnp.ndarray, r, pred: int) -> jnp.ndarray:
+    live = (epoch >= 0) & ~marked
+    if pred == PRED_OLD:
+        return live & (epoch <= r - 2)
+    if pred == PRED_DELTA:
+        return live & (epoch == r - 1)
+    return live & (epoch <= r - 1)
+
+
+def _match_atom(spo, ok, consts, const_mask, eq_pairs):
+    """const_mask/eq_pairs are static; consts is a traced (3,) int32."""
+    for pos in range(3):
+        if const_mask[pos]:
+            ok = ok & (spo[:, pos] == consts[pos])
+    for a, b in eq_pairs:
+        ok = ok & (spo[:, a] == spo[:, b])
+    return ok
+
+
+def _compact(cols: dict, valid: jnp.ndarray, cap: int):
+    """Pack valid rows to the front, truncating at ``cap``."""
+    order = jnp.argsort(~valid, stable=True)[:cap]
+    n_valid = valid.sum()
+    out_valid = jnp.arange(cap) < n_valid
+    out_cols = {v: c[order] for v, c in cols.items()}
+    overflow = n_valid > cap
+    return out_cols, out_valid, overflow
+
+
+def _expand_join(cols, valid, spo, ok, bound_items, free_items, out_cap):
+    """Join bindings against (spo, ok) on ``bound_items``; static structure.
+
+    bound_items: list of (var, atom_pos) already present in ``cols``.
+    free_items:  list of (var, atom_pos) newly bound by this atom.
+    """
+    if bound_items:
+        skey = _pack_cols([spo[:, pos] for _, pos in bound_items])
+        bkey = _pack_cols([cols[v] for v, _ in bound_items])
+    else:
+        skey = jnp.zeros(spo.shape[0], dtype=jnp.int64)
+        bkey = jnp.zeros(valid.shape[0], dtype=jnp.int64)
+    skey = jnp.where(ok, skey, KEY_MAX)
+    order = jnp.argsort(skey)
+    skey_s = skey[order]
+    bkey = jnp.where(valid, bkey, KEY_MAX - 1)
+    lo = jnp.searchsorted(skey_s, bkey, side="left")
+    hi = jnp.searchsorted(skey_s, bkey, side="right")
+    counts = jnp.where(valid, hi - lo, 0)
+    cum = jnp.cumsum(counts) - counts  # exclusive
+    total = counts.sum()
+    j = jnp.arange(out_cap)
+    seg = jnp.searchsorted(cum, j, side="right") - 1
+    seg = jnp.clip(seg, 0, valid.shape[0] - 1)
+    within = j - cum[seg]
+    srow = order[jnp.clip(lo[seg] + within, 0, spo.shape[0] - 1)]
+    out_valid = j < total
+    new_cols = {v: jnp.where(out_valid, cols[v][seg], 0) for v in cols}
+    for v, pos in free_items:
+        new_cols[v] = jnp.where(out_valid, spo[srow, pos], 0)
+    return new_cols, out_valid, total > out_cap, total
+
+
+@dataclass(frozen=True)
+class _AtomSpec:
+    """Static structure of one body atom within a plan."""
+
+    index: int
+    const_mask: tuple[bool, bool, bool]
+    eq_pairs: tuple[tuple[int, int], ...]
+    bound_items: tuple[tuple[int, int], ...]
+    free_items: tuple[tuple[int, int], ...]
+    pred: int
+    count_appl: bool = False  # this atom feeds the 'Rule appl.' counter
+
+
+def _atom_static(atom, bound_vars: set[int]):
+    const_mask = tuple(not is_var(t) for t in atom)
+    eq_pairs = []
+    first_pos: dict[int, int] = {}
+    for pos, t in enumerate(atom):
+        if is_var(t):
+            if t in first_pos:
+                eq_pairs.append((first_pos[t], pos))
+            else:
+                first_pos[t] = pos
+    bound = tuple((v, p) for v, p in first_pos.items() if v in bound_vars)
+    free = tuple((v, p) for v, p in first_pos.items() if v not in bound_vars)
+    return const_mask, tuple(eq_pairs), bound, free
+
+
+def build_plans(rule: Rule, full: bool) -> list[list[_AtomSpec]]:
+    """Delta plans (or the single full-evaluation plan) of a rule."""
+    plans = []
+    delta_positions = [0] if full else list(range(len(rule.body)))
+    for i in delta_positions:
+        specs = []
+        bound: set[int] = set()
+        for j, atom in enumerate(rule.body):
+            const_mask, eq_pairs, b, f = _atom_static(atom, bound)
+            if full:
+                pred = PRED_ALL
+            else:
+                pred = PRED_OLD if j < i else (PRED_DELTA if j == i else PRED_ALL)
+            count_appl = (pred == PRED_DELTA) or (full and j == 0)
+            specs.append(_AtomSpec(j, const_mask, eq_pairs, b, f, pred, count_appl))
+            bound |= {v for v, _ in b} | {v for v, _ in f}
+        plans.append(specs)
+    return plans
+
+
+def _gather(x, axis):
+    return jax.lax.all_gather(x, axis, tiled=True)
+
+
+def eval_plan(
+    spo,
+    epoch,
+    marked,
+    r,
+    atom_consts,  # (n_atoms, 3) traced rule constants (vars hold garbage 0)
+    head_consts,  # (3,) traced
+    plan: tuple,  # static tuple of _AtomSpec
+    head_var_slots: tuple,  # static: per head position, var id or None
+    bind_cap: int,
+    out_cap: int,
+    axis: str | None = None,
+):
+    """Evaluate one delta plan; returns (heads (out_cap,3), valid, stats...).
+
+    Under SPMD (``axis`` set): each atom joins against the *local* store
+    shard; bindings are all_gathered between atoms so every shard sees the
+    global binding table.  The final join's results stay local — their union
+    over shards is the global candidate set.
+    """
+    cols: dict[int, jnp.ndarray] = {}
+    valid = jnp.ones((1,), dtype=bool)  # the unit binding
+    n_appl = jnp.zeros((), I32)
+    overflow = jnp.zeros((), bool)
+    for step, spec in enumerate(plan):
+        ok = _epoch_ok(epoch, marked, r, spec.pred)
+        ok = _match_atom(spo, ok, atom_consts[spec.index], spec.const_mask, spec.eq_pairs)
+        if spec.count_appl:
+            n_appl = n_appl + ok.sum().astype(I32)
+        if step == 0 and not spec.bound_items:
+            # initial scan: bindings = matching rows directly (no join needed)
+            cols = {v: jnp.where(ok, spo[:, p], 0) for v, p in spec.free_items}
+            valid = ok
+            cols, valid, ov = _compact(cols, valid, bind_cap)
+            overflow |= ov
+        else:
+            cols, valid, ov, _ = _expand_join(
+                cols, valid, spo, ok, spec.bound_items, spec.free_items, bind_cap
+            )
+            overflow |= ov
+        if axis is not None and step < len(plan) - 1:
+            cols = {v: _gather(c, axis) for v, c in cols.items()}
+            valid = _gather(valid, axis)
+    # instantiate head
+    heads = []
+    for pos in range(3):
+        v = head_var_slots[pos]
+        if v is None:
+            heads.append(jnp.broadcast_to(head_consts[pos], valid.shape).astype(I32))
+        else:
+            heads.append(cols[v].astype(I32))
+    out = jnp.stack(heads, axis=1)
+    outc, out_valid, ov = _compact(
+        {"s": out[:, 0], "p": out[:, 1], "o": out[:, 2]}, valid, out_cap
+    )
+    out = jnp.stack([outc["s"], outc["p"], outc["o"]], axis=1)
+    n_deriv = out_valid.sum().astype(I32)
+    return out, out_valid, n_deriv[None], n_appl[None], (overflow | ov)[None]
+
+
+def process_candidates(
+    spo,
+    epoch,
+    marked,
+    n_used,
+    rep,
+    cands,
+    cand_valid,
+    r,
+    rewrite_cap: int,
+    axis: str | None = None,
+    n_shards: int = 1,
+    route_cap: int | None = None,
+    pair_cap: int = 4096,
+):
+    """Normalise, merge equalities, sweep, insert — the state-update half of a
+    round (Algorithms 3-6 in bulk).  Pure; runs per-shard under shard_map.
+
+    Under SPMD there are two exchange schemes:
+
+      * ``route_cap=None`` (baseline): candidates are ALL-GATHERED so every
+        shard sees/sorts the global padded stream; an ownership mask
+        (``subject % n_shards``) picks the inserting shard.  The per-shard
+        sort is O(n_shards x out_cap x 4) — 33.5M rows on the 256-chip
+        round_268m cell, 99% padding (measured, §Perf).
+      * ``route_cap=k`` (owner routing — the bulk analogue of the paper's
+        per-thread insertion into the shared store): each shard expands its
+        OWN candidates (rewrites + reflexivity), then routes every row to
+        its owner with one all_to_all of (n_shards, k) buckets.  Only the
+        few global sameAs pairs are still all-gathered (rho must update
+        identically everywhere).  Per-shard sort shrinks to
+        n_shards x route_cap rows and the exchange moves bucket payloads
+        instead of the padded stream.  Bucket overflow raises the engine's
+        capacity-retry (host doubles ``route_cap``).
+    """
+    arena_cap = spo.shape[0] - 1  # last row is the scatter trash slot
+    n_used = n_used.reshape(())
+    routed = axis is not None and route_cap is not None
+    route_overflow = jnp.zeros((), bool)
+
+    if axis is not None and not routed:
+        cands = _gather(cands, axis)
+        cand_valid = _gather(cand_valid, axis)
+
+    # 1) normalise with current rho
+    cands = jnp.where(cand_valid[:, None], rep[cands], 0).astype(I32)
+
+    # 2) merge sameAs pairs (deterministic min-hooking -> identical on shards)
+    is_pair = cand_valid & (cands[:, 1] == SAME_AS) & (cands[:, 0] != cands[:, 2])
+    if routed:
+        # pairs are few: compact locally, gather the compacted buffer
+        n_pairs = jax.lax.psum(is_pair.sum().astype(I32), axis)
+        pcols, pvalid, p_ov = _compact(
+            {"a": cands[:, 0], "b": cands[:, 2]}, is_pair, pair_cap
+        )
+        route_overflow |= p_ov
+        pairs = _gather(jnp.stack([pcols["a"], pcols["b"]], axis=1), axis)
+        pair_valid = _gather(pvalid, axis)
+    else:
+        pairs = jnp.stack([cands[:, 0], cands[:, 2]], axis=1)
+        pair_valid = is_pair
+        n_pairs = is_pair.sum().astype(I32)
+    new_rep = merge_pairs_jax(rep, pairs, pair_valid)
+    rep_changed = jnp.any(new_rep != rep)
+    rep = new_rep
+
+    # 3) re-normalise candidates under the new rho
+    cands = jnp.where(cand_valid[:, None], rep[cands], 0).astype(I32)
+
+    # 4) sweep the local store shard (bulk Algorithm 3)
+    live = (epoch >= 0) & ~marked
+    rewritten = rep[spo].astype(I32)
+    changed = live & jnp.any(rewritten != spo, axis=1)
+    marked = marked | changed
+    rw_cols, rw_valid, rw_overflow = _compact(
+        {"s": rewritten[:, 0], "p": rewritten[:, 1], "o": rewritten[:, 2]},
+        changed,
+        rewrite_cap,
+    )
+    rw = jnp.stack([rw_cols["s"], rw_cols["p"], rw_cols["o"]], axis=1)
+    if axis is not None and not routed:
+        rw = _gather(rw, axis)
+        rw_valid = _gather(rw_valid, axis)
+
+    all_c = jnp.concatenate([cands, rw], axis=0)
+    all_v = jnp.concatenate([cand_valid, rw_valid], axis=0)
+
+    # 5) contradiction check (~=5) on normal forms — pre-ownership, so every
+    # shard reports the same verdict
+    contradiction = jnp.any(
+        all_v & (all_c[:, 1] == DIFFERENT_FROM) & (all_c[:, 0] == all_c[:, 2])
+    )
+    if routed:  # local verdicts -> identical global verdict
+        contradiction = jax.lax.psum(contradiction.astype(I32), axis) > 0
+
+    # 6) reflexivity (Algorithm 4 lines 17-18): <c, sameAs, c> for each
+    # resource of each candidate, plus <sameAs,sameAs,sameAs>
+    res = all_c.reshape(-1)
+    res_valid = jnp.repeat(all_v, 3)
+    refl = jnp.stack([res, jnp.full_like(res, SAME_AS), res], axis=1)
+    sa_row = jnp.asarray([[SAME_AS, SAME_AS, SAME_AS]], dtype=I32)
+    any_v = jnp.any(all_v)
+    stream = jnp.concatenate([all_c, refl, sa_row], axis=0)
+    stream_v = jnp.concatenate([all_v, res_valid, any_v[None]], axis=0)
+    # origin flag: True for rows created by the reflexivity expansion (so a
+    # rule-derived reflexive fact is booked as a rule derivation, not here;
+    # stable sort keeps the candidate occurrence on duplicates)
+    stream_refl = jnp.concatenate(
+        [jnp.zeros(all_c.shape[0], bool), jnp.ones(res.shape[0] + 1, bool)]
+    )
+
+    # ownership: a row is inserted only by shard ``subject % n_shards``
+    if routed:
+        # route rows to their owners: one all_to_all of (n_shards, route_cap)
+        # buckets replaces sorting the global padded stream on every shard
+        owner = (stream[:, 0] % n_shards).astype(I32)
+        okey = jnp.where(stream_v, owner, n_shards)
+        order_r = jnp.argsort(okey, stable=True).astype(I32)
+        so = okey[order_r]
+        starts = jnp.searchsorted(so, jnp.arange(n_shards, dtype=I32)).astype(I32)
+        pos = jnp.arange(so.shape[0], dtype=I32) - starts[jnp.clip(so, 0, n_shards - 1)]
+        keep = (so < n_shards) & (pos < route_cap)
+        route_overflow |= jnp.any((so < n_shards) & (pos >= route_cap))
+        payload = jnp.concatenate(
+            [
+                stream[order_r],
+                stream_refl[order_r, None].astype(I32),
+                keep[:, None].astype(I32),
+            ],
+            axis=1,
+        )  # (N, 5): s, p, o, refl, valid
+        buckets = jnp.zeros((n_shards, route_cap, 5), I32)
+        tgt_shard = jnp.where(keep, so, 0)
+        tgt_slot = jnp.where(keep, pos, route_cap)  # out-of-range -> dropped
+        buckets = buckets.at[tgt_shard, tgt_slot].set(
+            jnp.where(keep[:, None], payload, 0), mode="drop"
+        )
+        recv = jax.lax.all_to_all(buckets, axis, split_axis=0, concat_axis=0, tiled=True)
+        stream = recv[..., :3].reshape(-1, 3)
+        stream_refl = recv[..., 3].reshape(-1).astype(bool)
+        stream_v = recv[..., 4].reshape(-1).astype(bool)
+    elif axis is not None:
+        own = (stream[:, 0] % n_shards) == jax.lax.axis_index(axis)
+        stream_v = stream_v & own
+
+    # 7) dedup within the stream
+    skeys = jnp.where(stream_v, _pack3(stream), KEY_MAX)
+    order = jnp.argsort(skeys, stable=True)
+    sk = skeys[order]
+    uniq = jnp.concatenate([jnp.asarray([True]), sk[1:] != sk[:-1]])
+    uniq = uniq & (sk < KEY_MAX)
+
+    # 8) membership against live local store rows
+    live = (epoch >= 0) & ~marked
+    store_keys = jnp.where(live, _pack3(spo), KEY_MAX)
+    sorder = jnp.argsort(store_keys)
+    sks = store_keys[sorder]
+    pos = jnp.searchsorted(sks, sk)
+    member = sks[jnp.clip(pos, 0, spo.shape[0] - 1)] == sk
+    fresh = uniq & ~member
+
+    # 9) scatter fresh rows into free local slots
+    n_fresh = fresh.sum().astype(I32)
+    slot = n_used + jnp.cumsum(fresh) - 1
+    insert_overflow = (n_used + n_fresh) > arena_cap
+    tgt = jnp.where(fresh, jnp.minimum(slot, arena_cap), arena_cap)
+    rows = stream[order]
+    spo = spo.at[tgt].set(jnp.where(fresh[:, None], rows, spo[tgt]))
+    epoch = epoch.at[tgt].set(jnp.where(fresh, r, epoch[tgt]))
+    # the trash row must stay dead no matter what was scattered into it
+    spo = spo.at[arena_cap].set(0)
+    epoch = epoch.at[arena_cap].set(-1)
+    n_used = n_used + n_fresh
+
+    # reflexive-added stat: fresh rows originating from the reflexivity step
+    is_refl = fresh & stream_refl[order]
+    n_refl = is_refl.sum().astype(I32)
+
+    flags = {
+        "rep_changed": rep_changed,
+        "contradiction": contradiction,
+        "overflow": (rw_overflow | insert_overflow | route_overflow)[None],
+        "n_new": n_fresh[None],
+        "n_pairs": n_pairs,
+        "n_marked": changed.sum().astype(I32)[None],
+        "n_reflexive": n_refl[None],
+    }
+    return spo, epoch, marked, n_used[None], rep, flags
+
+
+class CapacityError(RuntimeError):
+    pass
+
+
+class JaxEngine:
+    """REW materialisation with static capacities; single-device or SPMD.
+
+    Pass ``mesh`` (a 1-D ``jax.sharding.Mesh`` whose axis shards the arena)
+    to run distributed; capacities are then per shard.  ``materialise``
+    retries with doubled capacities on overflow, so callers normally never
+    see :class:`CapacityError`.
+    """
+
+    def __init__(
+        self,
+        n_resources: int,
+        capacity: int = 1 << 12,
+        bind_cap: int = 1 << 12,
+        out_cap: int = 1 << 12,
+        rewrite_cap: int = 1 << 12,
+        mesh=None,
+        axis: str = "data",
+        route_cap: int | None = None,
+    ) -> None:
+        self.n_resources = n_resources
+        self.capacity = capacity
+        self.bind_cap = bind_cap
+        self.out_cap = out_cap
+        self.rewrite_cap = rewrite_cap
+        self.route_cap = route_cap
+        self.mesh = mesh
+        self.axis = axis if mesh is not None else None
+        self.n_shards = int(np.prod(mesh.devices.shape)) if mesh is not None else 1
+        self._fns: dict = {}
+
+    # -- jit wrappers -------------------------------------------------------
+    def _wrap(self, fn, in_specs, out_specs):
+        if self.mesh is None:
+            return jax.jit(fn)
+        return jax.jit(
+            jax.shard_map(
+                fn, mesh=self.mesh, in_specs=in_specs, out_specs=out_specs,
+                check_vma=False,
+            )
+        )
+
+    def _get_plan_fn(self, plan_key, plan, head_slots):
+        if plan_key not in self._fns:
+            a = self.axis
+            fn = partial(
+                eval_plan,
+                plan=plan,
+                head_var_slots=head_slots,
+                bind_cap=self.bind_cap,
+                out_cap=self.out_cap,
+                axis=a,
+            )
+            d = P(a) if a else None
+            rpl = P() if a else None
+            self._fns[plan_key] = self._wrap(
+                fn,
+                in_specs=(d, d, d, rpl, rpl, rpl),
+                out_specs=(d, d, d, d, d),
+            )
+        return self._fns[plan_key]
+
+    def _get_process_fn(self, n_cand_rows: int):
+        key = ("process", n_cand_rows)
+        if key not in self._fns:
+            a = self.axis
+            fn = partial(
+                process_candidates,
+                rewrite_cap=self.rewrite_cap,
+                axis=a,
+                n_shards=self.n_shards,
+                route_cap=self.route_cap if a is not None else None,
+                pair_cap=min(self.out_cap, 4096),
+            )
+            d = P(a) if a else None
+            rpl = P() if a else None
+            flag_specs = {
+                "rep_changed": rpl,
+                "contradiction": rpl,
+                "overflow": d,
+                "n_new": d,
+                "n_pairs": rpl,
+                "n_marked": d,
+                "n_reflexive": d,
+            }
+            self._fns[key] = self._wrap(
+                fn,
+                in_specs=(d, d, d, d, rpl, d, d, rpl),
+                out_specs=(d, d, d, d, rpl, flag_specs),
+            )
+        return self._fns[key]
+
+    # -- driver --------------------------------------------------------------
+    def _run(self, facts: np.ndarray, program: Program, max_rounds: int):
+        stats = MatStats(mode="REW-jax" + ("-spmd" if self.mesh is not None else ""))
+        cap, D = self.capacity, self.n_shards
+        spo = jnp.zeros(((cap + 1) * D, 3), I32)
+        epoch = jnp.full(((cap + 1) * D,), -1, I32)
+        marked = jnp.zeros(((cap + 1) * D,), bool)
+        n_used = jnp.zeros((D,), I32)
+        rep = jnp.arange(self.n_resources, dtype=I32)
+
+        p_cur = program
+        requeued: list[int] = []
+
+        facts = np.asarray(facts, np.int32).reshape(-1, 3)
+        stats.triples_explicit = facts.shape[0]
+        rows_global = self.out_cap * D
+        if facts.shape[0] > rows_global:
+            raise CapacityError("out_cap")
+        pad = rows_global - facts.shape[0]
+        cands = jnp.asarray(np.pad(facts, ((0, pad), (0, 0))), I32)
+        cand_valid = jnp.asarray(np.arange(rows_global) < facts.shape[0])
+
+        r = 0
+        have_cands = True
+        while have_cands or requeued:
+            r += 1
+            stats.rounds += 1
+            if r > max_rounds:
+                raise RuntimeError("did not converge")
+            proc = self._get_process_fn(int(cands.shape[0]))
+            spo, epoch, marked, n_used, rep_new, flags = proc(
+                spo, epoch, marked, n_used, rep, cands, cand_valid, jnp.asarray(r, I32)
+            )
+            if bool(np.asarray(flags["overflow"]).any()):
+                raise CapacityError("store/rewrite")
+            if bool(np.asarray(flags["contradiction"]).reshape(-1)[0]):
+                from .materialise import Contradiction
+
+                raise Contradiction("owl:differentFrom violation")
+            stats.sameas_pairs += int(np.asarray(flags["n_pairs"]).reshape(-1)[0])
+            n_refl = int(np.asarray(flags["n_reflexive"]).sum())
+            stats.reflexive_added += n_refl
+            stats.derivations += n_refl
+
+            rep_changed = bool(np.asarray(flags["rep_changed"]).reshape(-1)[0])
+            if rep_changed:
+                rep_host = compress_np(np.asarray(rep_new))
+                p_new, changed_idx = p_cur.rewrite(rep_host)
+                if changed_idx:
+                    stats.rule_rewrites += 1
+                    stats.rules_requeued += len(changed_idx)
+                    requeued.extend(changed_idx)
+                p_cur = p_new
+            rep = rep_new
+
+            # evaluate plans for the new delta
+            bufs = []
+            n_new = int(np.asarray(flags["n_new"]).sum())
+            if n_new > 0:
+                for k, rule in enumerate(p_cur.rules):
+                    bufs += self._eval_rule(spo, epoch, marked, r + 1, rule, k, False, stats)
+            for k in sorted(set(requeued)):
+                bufs += self._eval_rule(spo, epoch, marked, r + 1, p_cur.rules[k], k, True, stats)
+            requeued = []
+            if bufs:
+                cands = jnp.concatenate([b[0] for b in bufs], axis=0)
+                cand_valid = jnp.concatenate([b[1] for b in bufs], axis=0)
+                have_cands = bool(cand_valid.any())
+            else:
+                have_cands = False
+
+        stats.merged_resources = int(
+            (compress_np(np.asarray(rep)) != np.arange(self.n_resources)).sum()
+        )
+        stats.triples_total = int(np.asarray(n_used).sum())
+        return spo, epoch, marked, rep, p_cur, stats
+
+    def _eval_rule(self, spo, epoch, marked, r, rule: Rule, k: int, full: bool, stats: MatStats):
+        atom_consts = np.zeros((len(rule.body), 3), np.int32)
+        for j, atom in enumerate(rule.body):
+            for pos, t in enumerate(atom):
+                atom_consts[j, pos] = 0 if is_var(t) else t
+        head_consts = np.asarray([0 if is_var(t) else t for t in rule.head], np.int32)
+        head_slots = tuple(t if is_var(t) else None for t in rule.head)
+        plans = build_plans(rule, full=full)
+        out = []
+        for i, plan in enumerate(plans):
+            plan_t = tuple(plan)
+            fn = self._get_plan_fn(("plan", k, i, full, plan_t, head_slots), plan_t, head_slots)
+            heads, valid, n_d, n_a, ov = fn(
+                spo, epoch, marked, jnp.asarray(r, I32),
+                jnp.asarray(atom_consts), jnp.asarray(head_consts),
+            )
+            if bool(np.asarray(ov).any()):
+                raise CapacityError("bind/out")
+            stats.derivations += int(np.asarray(n_d).sum())
+            stats.rule_applications += int(np.asarray(n_a).sum())
+            out.append((heads, valid))
+        return out
+
+    def materialise(self, facts, program: Program, max_rounds: int = 10_000):
+        """REW materialisation with automatic capacity growth."""
+        import time
+
+        t0 = time.perf_counter()
+        while True:
+            try:
+                with enable_x64():
+                    spo, epoch, marked, rep, p_cur, stats = self._run(
+                        facts, program, max_rounds
+                    )
+                break
+            except CapacityError:
+                self.capacity *= 2
+                self.bind_cap *= 2
+                self.out_cap *= 2
+                self.rewrite_cap *= 2
+                if self.route_cap is not None:
+                    self.route_cap *= 2
+                self._fns.clear()
+        stats.wall_seconds = time.perf_counter() - t0
+        spo_h = np.asarray(spo)
+        epoch_h = np.asarray(epoch)
+        marked_h = np.asarray(marked)
+        live = (epoch_h >= 0) & ~marked_h
+        stats.triples_unmarked = int(live.sum())
+        rep_h = compress_np(np.asarray(rep))
+        return spo_h[live], rep_h, stats

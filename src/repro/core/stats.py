@@ -1,0 +1,49 @@
+"""Materialisation statistics mirroring the paper's Table 2 columns."""
+
+from __future__ import annotations
+
+import dataclasses
+
+
+@dataclasses.dataclass
+class MatStats:
+    """Counters collected during materialisation.
+
+    ``derivations`` counts (rule, substitution) pairs that produce a head fact
+    (duplicates included) — the paper's 'Derivations' column.  ``rule_applications``
+    counts (rule, body-position, delta-fact) partial instantiations attempted —
+    the paper's 'Rule appl.' column.  ``triples_total`` / ``triples_unmarked``
+    mirror 'Triples after (total / unmarked)'.
+    """
+
+    mode: str = "REW"
+    derivations: int = 0
+    rule_applications: int = 0
+    merged_resources: int = 0
+    sameas_pairs: int = 0
+    reflexive_added: int = 0
+    rounds: int = 0
+    rule_rewrites: int = 0          # how many times P' := rho(P) changed P'
+    rules_requeued: int = 0         # rules placed on the R queue analogue
+    triples_total: int = 0          # arena rows used (marked + unmarked)
+    triples_unmarked: int = 0
+    triples_explicit: int = 0
+    wall_seconds: float = 0.0
+    contradiction: bool = False
+    memory_bytes: int = 0
+
+    def as_dict(self) -> dict:
+        return dataclasses.asdict(self)
+
+    def factor_over(self, other: "MatStats") -> dict:
+        """Ratios AX/REW as in the paper's 'factor' rows."""
+
+        def ratio(a, b):
+            return float(a) / float(b) if b else float("inf")
+
+        return {
+            "triples": ratio(other.triples_unmarked, self.triples_unmarked),
+            "rule_applications": ratio(other.rule_applications, self.rule_applications),
+            "derivations": ratio(other.derivations, self.derivations),
+            "time": ratio(other.wall_seconds, self.wall_seconds),
+        }

@@ -1,0 +1,140 @@
+"""Fixed-growth triple arena with a validity bitmask.
+
+The paper never deletes facts — it *marks* them outdated and skips them during
+matching, removing marked facts in postprocessing (§4).  The arena mirrors
+that: rows are append-only; ``valid`` flips to False when a fact is rewritten.
+Join machinery indexes only valid rows via sorted int64 keys (21 bits per
+position), the SIMD-friendly replacement for RDFox's six hash/array indexes.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+_SHIFT_S = 42
+_SHIFT_P = 21
+
+
+def pack(spo: np.ndarray) -> np.ndarray:
+    """(n,3) int -> (n,) int64 lexicographic sort key."""
+    s = spo[:, 0].astype(np.int64)
+    p = spo[:, 1].astype(np.int64)
+    o = spo[:, 2].astype(np.int64)
+    return (s << _SHIFT_S) | (p << _SHIFT_P) | o
+
+
+def unpack(keys: np.ndarray) -> np.ndarray:
+    mask = (1 << 21) - 1
+    s = (keys >> _SHIFT_S) & mask
+    p = (keys >> _SHIFT_P) & mask
+    o = keys & mask
+    return np.stack([s, p, o], axis=1).astype(np.int32)
+
+
+class TripleArena:
+    """Append-only store with outdated-marking, mirroring T in the paper."""
+
+    def __init__(self, capacity: int = 1024) -> None:
+        self.spo = np.zeros((capacity, 3), dtype=np.int32)
+        self.valid = np.zeros(capacity, dtype=bool)
+        self.n = 0
+        # membership set over *valid* rows: sorted packed keys + row perm
+        self._keys: np.ndarray | None = None
+        self._rows: np.ndarray | None = None
+
+    # -- capacity ----------------------------------------------------------
+    def _ensure(self, extra: int) -> None:
+        need = self.n + extra
+        cap = self.spo.shape[0]
+        if need <= cap:
+            return
+        while cap < need:
+            cap *= 2
+        spo = np.zeros((cap, 3), dtype=np.int32)
+        spo[: self.n] = self.spo[: self.n]
+        valid = np.zeros(cap, dtype=bool)
+        valid[: self.n] = self.valid[: self.n]
+        self.spo, self.valid = spo, valid
+
+    # -- index -------------------------------------------------------------
+    def _rebuild_index(self) -> None:
+        rows = np.flatnonzero(self.valid[: self.n])
+        keys = pack(self.spo[rows])
+        order = np.argsort(keys, kind="stable")
+        self._keys = keys[order]
+        self._rows = rows[order]
+
+    def index(self) -> tuple[np.ndarray, np.ndarray]:
+        if self._keys is None:
+            self._rebuild_index()
+        return self._keys, self._rows  # type: ignore[return-value]
+
+    # -- core ops ----------------------------------------------------------
+    def contains(self, spo: np.ndarray) -> np.ndarray:
+        """Boolean membership of candidate triples among *valid* rows."""
+        keys, _ = self.index()
+        cand = pack(np.asarray(spo, dtype=np.int32).reshape(-1, 3))
+        pos = np.searchsorted(keys, cand)
+        pos = np.clip(pos, 0, keys.shape[0] - 1) if keys.shape[0] else pos
+        if keys.shape[0] == 0:
+            return np.zeros(cand.shape[0], dtype=bool)
+        return keys[pos] == cand
+
+    def add_batch(self, spo: np.ndarray) -> np.ndarray:
+        """T.add for a batch: dedup within the batch and against valid rows.
+
+        Returns the (m,3) array of facts actually added (the new Delta).
+        """
+        spo = np.asarray(spo, dtype=np.int32).reshape(-1, 3)
+        if spo.shape[0] == 0:
+            return spo
+        keys = pack(spo)
+        uniq_keys, first = np.unique(keys, return_index=True)
+        cand = spo[np.sort(first)]
+        fresh = cand[~self.contains(cand)]
+        if fresh.shape[0] == 0:
+            return fresh
+        self._ensure(fresh.shape[0])
+        self.spo[self.n : self.n + fresh.shape[0]] = fresh
+        self.valid[self.n : self.n + fresh.shape[0]] = True
+        self.n += fresh.shape[0]
+        self._keys = None
+        return fresh
+
+    def mark_rows(self, rows: np.ndarray) -> None:
+        """T.mark: flip validity (facts stay in the arena, as in the paper)."""
+        self.valid[rows] = False
+        self._keys = None
+
+    def valid_triples(self) -> np.ndarray:
+        return self.spo[: self.n][self.valid[: self.n]]
+
+    def rewrite_sweep(self, rep: np.ndarray) -> np.ndarray:
+        """Bulk analogue of Algorithm 3: mark outdated rows, return rewrites.
+
+        A row is outdated iff any position changes under rho.  Returns the
+        rewritten versions (not yet inserted; caller routes them through
+        ``add_batch`` so re-derivations dedup correctly).
+        """
+        live = self.spo[: self.n]
+        mask_valid = self.valid[: self.n]
+        rewritten = rep[live]
+        changed = (rewritten != live).any(axis=1) & mask_valid
+        rows = np.flatnonzero(changed)
+        if rows.shape[0] == 0:
+            return np.zeros((0, 3), dtype=np.int32)
+        self.mark_rows(rows)
+        return rewritten[rows].astype(np.int32)
+
+    # -- stats -------------------------------------------------------------
+    @property
+    def total(self) -> int:
+        return self.n
+
+    @property
+    def unmarked(self) -> int:
+        return int(self.valid[: self.n].sum())
+
+    @property
+    def nbytes(self) -> int:
+        return self.spo.nbytes + self.valid.nbytes

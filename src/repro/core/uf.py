@@ -1,0 +1,140 @@
+"""Representative map rho as a union-find.
+
+The paper implements rho with CAS-based lock-free ``mergeInto`` (Algorithm 5)
+plus per-clique linked lists.  TPUs have no CAS, so the adaptation (DESIGN.md
+S2) is the classic data-parallel equivalence closure:
+
+  * **min-hooking**: all sameAs pairs of a round are applied at once with a
+    conflict-free ``scatter-min`` (``rep[hi] = min(rep[hi], lo)``),
+  * **pointer doubling**: ``rep = rep[rep]`` iterated to full path compression.
+
+The representative of a clique is its minimum resource ID — a concrete
+instance of the paper's "arbitrary total order" used to prevent cyclic merges,
+with the bonus that the result is order-independent and deterministic.
+
+Two interchangeable implementations:
+  * ``merge_pairs_np`` — plain numpy (reference engine),
+  * ``merge_pairs_jax`` — pure ``jax.lax`` control flow, jittable; the
+    pointer-doubling step can be served by the Pallas kernel
+    :mod:`repro.kernels.pointer_jump` on TPU.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+
+# ---------------------------------------------------------------------------
+# numpy reference
+# ---------------------------------------------------------------------------
+
+def compress_np(rep: np.ndarray) -> np.ndarray:
+    """Full path compression by pointer doubling (O(log depth) sweeps)."""
+    rep = rep.copy()
+    while True:
+        nxt = rep[rep]
+        if np.array_equal(nxt, rep):
+            return rep
+        rep = nxt
+
+
+def merge_pairs_np(rep: np.ndarray, pairs: np.ndarray) -> tuple[np.ndarray, int]:
+    """Merge (a, b) rows of ``pairs`` into ``rep``; returns (rep', n_merged).
+
+    ``n_merged`` counts resources whose representative changed — the paper's
+    'Merged resources' column counts each resource merged once, which holds
+    here because a non-root never becomes a root again.
+    """
+    if pairs.size == 0:
+        return rep, 0
+    rep = compress_np(rep)
+    before_roots = int((rep == np.arange(rep.shape[0])).sum())
+    a = rep[pairs[:, 0]]
+    b = rep[pairs[:, 1]]
+    while True:
+        lo = np.minimum(a, b)
+        hi = np.maximum(a, b)
+        active = lo != hi
+        if not active.any():
+            break
+        # conflict-free scatter-min hooking
+        np.minimum.at(rep, hi[active], lo[active])
+        rep = compress_np(rep)
+        a = rep[a]
+        b = rep[b]
+    after_roots = int((rep == np.arange(rep.shape[0])).sum())
+    return rep, before_roots - after_roots
+
+
+# ---------------------------------------------------------------------------
+# jax implementation (jit-compatible, static shapes)
+# ---------------------------------------------------------------------------
+
+def _compress_jax(rep: jnp.ndarray) -> jnp.ndarray:
+    def cond(state):
+        rep, done = state
+        return ~done
+
+    def body(state):
+        rep, _ = state
+        nxt = rep[rep]
+        return nxt, jnp.array_equal(nxt, rep)
+
+    rep, _ = jax.lax.while_loop(cond, body, (rep, jnp.asarray(False)))
+    return rep
+
+
+def merge_pairs_jax(rep: jnp.ndarray, pairs: jnp.ndarray, pair_valid: jnp.ndarray) -> jnp.ndarray:
+    """Batched merge under a validity mask; shapes are static.
+
+    ``pairs`` is (m, 2) int32 with garbage rows masked out by ``pair_valid``.
+    """
+    n = rep.shape[0]
+    rep = _compress_jax(rep)
+
+    def cond(state):
+        rep, a, b = state
+        return jnp.any((a != b) & pair_valid)
+
+    def body(state):
+        rep, a, b = state
+        lo = jnp.minimum(a, b)
+        hi = jnp.maximum(a, b)
+        active = (lo != hi) & pair_valid
+        # masked scatter-min: inactive rows write to a dummy slot (their own lo)
+        tgt = jnp.where(active, hi, 0)
+        val = jnp.where(active, lo, rep[0])
+        rep = rep.at[tgt].min(val)
+        rep = _compress_jax(rep)
+        return rep, rep[a], rep[b]
+
+    a = rep[jnp.where(pair_valid, pairs[:, 0], 0)]
+    b = rep[jnp.where(pair_valid, pairs[:, 1], 0)]
+    rep, _, _ = jax.lax.while_loop(cond, body, (rep, a, b))
+    return rep
+
+
+# ---------------------------------------------------------------------------
+# clique utilities (host)
+# ---------------------------------------------------------------------------
+
+def clique_sizes(rep: np.ndarray) -> np.ndarray:
+    """sizes[r] = |clique represented by r| (1 for singletons, 0 for non-roots)."""
+    rep = compress_np(np.asarray(rep))
+    return np.bincount(rep, minlength=rep.shape[0])
+
+
+def clique_members(rep: np.ndarray) -> dict[int, np.ndarray]:
+    """representative -> member array, only for cliques of size > 1."""
+    rep = compress_np(np.asarray(rep))
+    order = np.argsort(rep, kind="stable")
+    sorted_rep = rep[order]
+    out: dict[int, np.ndarray] = {}
+    boundaries = np.flatnonzero(np.diff(sorted_rep)) + 1
+    for seg in np.split(order, boundaries):
+        if seg.shape[0] > 1:
+            out[int(rep[seg[0]])] = np.sort(seg)
+    return out

@@ -1,0 +1,65 @@
+"""Jit'd public wrappers for the Pallas kernels.
+
+On the CPU container, kernels run in ``interpret=True`` mode (the kernel body
+executes as traced JAX ops — bit-identical semantics, no Mosaic lowering); on
+a real TPU backend ``interpret=False`` compiles to Mosaic.  ``INTERPRET``
+auto-detects.
+"""
+
+from __future__ import annotations
+
+import jax
+
+from .bsearch import search_bounds as _search_bounds
+from .embedding_bag import embedding_bag as _embedding_bag
+from .flash_attention import flash_attention_bhsd as _flash_attention_bhsd
+from .fm_interact import fm_interact as _fm_interact
+from .pointer_jump import pointer_jump as _pointer_jump
+from .rewrite_triples import rewrite_triples as _rewrite_triples
+from .segment_sum import segment_sum as _segment_sum
+
+INTERPRET = jax.default_backend() != "tpu"
+
+
+def pointer_jump(idx, table, **kw):
+    kw.setdefault("interpret", INTERPRET)
+    return _pointer_jump(idx, table, **kw)
+
+
+def rewrite_triples(spo, rho, **kw):
+    kw.setdefault("interpret", INTERPRET)
+    return _rewrite_triples(spo, rho, **kw)
+
+
+def search_bounds(queries, keys, **kw):
+    kw.setdefault("interpret", INTERPRET)
+    return _search_bounds(queries, keys, **kw)
+
+
+def embedding_bag(ids, table, **kw):
+    kw.setdefault("interpret", INTERPRET)
+    return _embedding_bag(ids, table, **kw)
+
+
+def fm_interact(x, **kw):
+    kw.setdefault("interpret", INTERPRET)
+    return _fm_interact(x, **kw)
+
+
+def segment_sum(x, seg, n_segments, **kw):
+    kw.setdefault("interpret", INTERPRET)
+    return _segment_sum(x, seg, n_segments, **kw)
+
+
+def flash_attention(q, k, v, causal=True, q_offset=0, **kw):
+    """q (B,S,H,D), k/v (B,T,KV,D) -> (B,S,H,D); GQA flash attention."""
+    kw.setdefault("interpret", INTERPRET)
+    out = _flash_attention_bhsd(
+        q.transpose(0, 2, 1, 3),
+        k.transpose(0, 2, 1, 3),
+        v.transpose(0, 2, 1, 3),
+        q_offset,
+        causal=causal,
+        **kw,
+    )
+    return out.transpose(0, 2, 1, 3)

@@ -1,0 +1,43 @@
+"""Pure-jnp oracles for every Pallas kernel (the ref.py contract)."""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def pointer_jump_ref(idx: jnp.ndarray, table: jnp.ndarray) -> jnp.ndarray:
+    return table[idx]
+
+
+def rewrite_triples_ref(spo: jnp.ndarray, rho: jnp.ndarray):
+    out = rho[spo]
+    changed = jnp.any(out != spo, axis=1)
+    return out, changed
+
+
+def search_bounds_ref(queries, keys):
+    # numpy (not jnp): int64 keys must survive without the x64 flag
+    import numpy as np
+
+    queries = np.asarray(queries, np.int64)
+    keys = np.asarray(keys, np.int64)
+    lo = np.searchsorted(keys, queries, side="left")
+    hi = np.searchsorted(keys, queries, side="right")
+    return lo.astype(np.int32), hi.astype(np.int32)
+
+
+def embedding_bag_ref(ids: jnp.ndarray, table: jnp.ndarray) -> jnp.ndarray:
+    return table[ids].sum(axis=1)
+
+
+def fm_interact_ref(x: jnp.ndarray) -> jnp.ndarray:
+    xf = x.astype(jnp.float32)
+    s = xf.sum(axis=1)
+    sq = (xf * xf).sum(axis=1)
+    return (0.5 * (s * s - sq).sum(axis=1)).astype(x.dtype)
+
+
+def segment_sum_ref(x: jnp.ndarray, seg: jnp.ndarray, n_segments: int) -> jnp.ndarray:
+    import jax
+
+    return jax.ops.segment_sum(x, seg, num_segments=n_segments)

@@ -1,0 +1,78 @@
+"""Pallas TPU kernel: fused triple rewrite ``out = rho[spo]`` + changed mask.
+
+The bulk Algorithm-3 sweep (DESIGN.md §2): every triple's three positions are
+mapped through the representative table and a per-row 'outdated' flag is
+produced in the same pass.  Same one-hot-matmul gather as
+:mod:`repro.kernels.pointer_jump`, with the (B,3) block flattened to (3B,1).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _kernel(spo_ref, rho_ref, out_ref, changed_ref, *, tile: int):
+    t = pl.program_id(1)
+    spo = spo_ref[...]  # (B, 3) int32
+    rho = rho_ref[...]  # (T, 1) int32
+    b = spo.shape[0]
+    flat = spo.reshape(b * 3)
+    rel = flat - t * tile
+    in_tile = (rel >= 0) & (rel < tile)
+    iota = jax.lax.broadcasted_iota(jnp.int32, (b * 3, tile), 1)
+    onehot = jnp.where(in_tile[:, None], rel[:, None] == iota, False)
+    vals = jnp.dot(
+        onehot.astype(jnp.float32),
+        rho.astype(jnp.float32),
+        preferred_element_type=jnp.float32,
+    ).astype(jnp.int32).reshape(b, 3)
+
+    @pl.when(t == 0)
+    def _init():
+        out_ref[...] = jnp.zeros_like(out_ref)
+        changed_ref[...] = jnp.zeros_like(changed_ref)
+
+    out_ref[...] += vals
+    diff = in_tile.reshape(b, 3) & (vals != spo)
+    changed_ref[...] |= jnp.any(diff, axis=1, keepdims=True).astype(jnp.int32)
+
+
+@functools.partial(jax.jit, static_argnames=("block", "tile", "interpret"))
+def rewrite_triples(
+    spo: jnp.ndarray,
+    rho: jnp.ndarray,
+    *,
+    block: int = 256,
+    tile: int = 512,
+    interpret: bool = True,
+) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Returns (rho[spo], changed) for (n,3) int32 triples."""
+    n = spo.shape[0]
+    v = rho.shape[0]
+    n_pad = -n % block
+    v_pad = -v % tile
+    spo_p = jnp.pad(spo, ((0, n_pad), (0, 0)))
+    rho_p = jnp.pad(rho, (0, v_pad)).reshape(-1, 1)
+    grid = (spo_p.shape[0] // block, rho_p.shape[0] // tile)
+    out, changed = pl.pallas_call(
+        functools.partial(_kernel, tile=tile),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block, 3), lambda i, t: (i, 0)),
+            pl.BlockSpec((tile, 1), lambda i, t: (t, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((block, 3), lambda i, t: (i, 0)),
+            pl.BlockSpec((block, 1), lambda i, t: (i, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((spo_p.shape[0], 3), jnp.int32),
+            jax.ShapeDtypeStruct((spo_p.shape[0], 1), jnp.int32),
+        ],
+        interpret=interpret,
+    )(spo_p, rho_p)
+    return out[:n], changed[:n, 0].astype(bool)

@@ -1,0 +1,60 @@
+import os
+os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=512")
+
+"""Dump the largest HLO buffers of a dry-run cell (memory debugging aid).
+
+Usage: PYTHONPATH=src python -m repro.launch.bufdump --arch X --shape Y [--mesh single]
+"""
+
+import argparse
+import re
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--shape", required=True)
+    ap.add_argument("--mesh", default="single")
+    ap.add_argument("--top", type=int, default=16)
+    ap.add_argument("--min-mib", type=float, default=256.0)
+    args = ap.parse_args()
+
+    import jax
+
+    from repro.configs import get_arch
+    from repro.launch.mesh import make_production_mesh
+    from repro.launch.workloads import build_cell
+
+    mesh = make_production_mesh(multi_pod=(args.mesh == "multi"))
+    spec = get_arch(args.arch)
+    wl = build_cell(spec, spec.shape(args.shape), mesh)
+    with mesh:
+        c = (
+            jax.jit(wl.step, in_shardings=wl.in_shardings, out_shardings=wl.out_shardings)
+            .lower(*wl.input_specs)
+            .compile()
+        )
+    txt = c.as_text()
+    db = {"pred": 1, "s8": 1, "u8": 1, "bf16": 2, "f16": 2, "s16": 2, "u16": 2,
+          "f32": 4, "s32": 4, "u32": 4, "f64": 8, "s64": 8, "u64": 8}
+    agg = {}
+    for m in re.finditer(r"%([\w.-]+) = ([a-z0-9]+)\[([0-9,]*)\]\S* ([a-z][a-z0-9-]*)\(", txt):
+        _, dt, dims, op = m.groups()
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        b = n * db.get(dt, 4)
+        if b >= args.min_mib * 2**20:
+            key = f"{dt}[{dims}] {op}"
+            cnt, _ = agg.get(key, (0, 0))
+            agg[key] = (cnt + 1, b)
+    ma = c.memory_analysis()
+    print(f"peak = args {ma.argument_size_in_bytes/2**30:.2f} + temp "
+          f"{ma.temp_size_in_bytes/2**30:.2f} + out {ma.output_size_in_bytes/2**30:.2f} GiB")
+    for key, (cnt, b) in sorted(agg.items(), key=lambda kv: -kv[1][1])[: args.top]:
+        print(f"{b/2**30:8.2f} GiB x{cnt:3d}  {key}")
+
+
+if __name__ == "__main__":
+    main()

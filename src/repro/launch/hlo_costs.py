@@ -1,0 +1,335 @@
+"""Loop-aware cost analysis over compiled (SPMD-partitioned) HLO text.
+
+``compiled.cost_analysis()`` counts each ``while`` body ONCE, so any model
+lowered with ``lax.scan`` (scan-over-layers, chunked attention, grad accum)
+under-reports FLOPs/bytes by the trip count — useless for a roofline.  This
+module re-derives the three roofline inputs from the HLO text with loop
+multipliers:
+
+  * every computation gets a multiplier = product of trip counts of the
+    ``while`` loops enclosing it (trip counts parsed from loop conditions —
+    exact for ``scan``/``fori_loop``, which compare against a constant),
+  * FLOPs: ``dot`` = 2 * prod(result dims) * prod(lhs contracting dims);
+    elementwise arithmetic = result elements; transcendentals counted apart,
+  * bytes: per instruction, operands + result (fusions count only their
+    boundary, matching XLA's fusion cost model; pure-layout ops are free),
+  * collective bytes: operand bytes of all-gather / all-reduce /
+    reduce-scatter / all-to-all / collective-permute, times the multiplier.
+
+Everything is per-device (the module is the per-device SPMD program).
+Validated against ``cost_analysis()`` on loop-free modules and against an
+unrolled-vs-scanned pair (tests/test_hlo_costs.py).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import re
+from collections import defaultdict
+
+_DTYPE_BYTES = {
+    "pred": 1, "s4": 0.5, "u4": 0.5, "s8": 1, "u8": 1,
+    "f8e4m3fn": 1, "f8e5m2": 1, "f8e4m3b11fnuz": 1, "f8e4m3fnuz": 1, "f8e5m2fnuz": 1,
+    "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4,
+    "s64": 8, "u64": 8, "f64": 8, "c64": 8, "c128": 16,
+}
+
+_SHAPE_RE = re.compile(r"\b([a-z][a-z0-9]*)\[([0-9,]*)\]")
+_INSTR_RE = re.compile(
+    r"^\s*(?:ROOT\s+)?%?([\w.-]+)\s*=\s*(.*?)\s+([a-z][a-z0-9-]*)\((.*)$"
+)
+_COMP_HDR_RE = re.compile(r"^(?:ENTRY\s+)?%?([\w.-]+)\s*\(.*\)\s*->.*\{\s*$")
+
+_COLLECTIVES = {
+    "all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+    "collective-permute", "collective-broadcast", "ragged-all-to-all",
+    "all-gather-start", "all-reduce-start", "collective-permute-start",
+}
+_SKIP_BYTES = {
+    "parameter", "constant", "tuple", "get-tuple-element", "bitcast",
+    "after-all", "partition-id", "replica-id", "iota", "while", "conditional",
+    "call", "copy-start", "copy-done", "all-gather-done", "all-reduce-done",
+    "collective-permute-done", "opt-barrier",
+}
+_ELEMENTWISE_1FLOP = {
+    "add", "subtract", "multiply", "divide", "maximum", "minimum", "abs",
+    "negate", "compare", "select", "and", "or", "xor", "not", "clamp",
+    "remainder", "shift-left", "shift-right-logical", "shift-right-arithmetic",
+    "floor", "ceil", "round-nearest-afz", "sign",
+}
+_TRANSCENDENTAL = {
+    "exponential", "log", "tanh", "rsqrt", "sqrt", "power", "logistic",
+    "sine", "cosine", "expm1", "log1p", "erf", "atan2", "cbrt",
+}
+
+
+def _shape_elems_bytes(shape_text: str) -> tuple[float, float]:
+    """Total (elements, bytes) over all array shapes in ``shape_text``."""
+    elems = nbytes = 0.0
+    for dt, dims in _SHAPE_RE.findall(shape_text):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        elems += n
+        nbytes += n * _DTYPE_BYTES[dt]
+    return elems, nbytes
+
+
+@dataclasses.dataclass
+class _Instr:
+    name: str
+    shape_text: str
+    opcode: str
+    rest: str  # operand list + attributes
+
+
+@dataclasses.dataclass
+class _Comp:
+    name: str
+    instrs: list
+    by_name: dict
+
+
+def parse_module(hlo: str) -> dict[str, _Comp]:
+    comps: dict[str, _Comp] = {}
+    cur: _Comp | None = None
+    for line in hlo.splitlines():
+        hdr = _COMP_HDR_RE.match(line)
+        if hdr and ("->" in line):
+            cur = _Comp(hdr.group(1), [], {})
+            comps[cur.name] = cur
+            continue
+        if line.strip() == "}":
+            cur = None
+            continue
+        if cur is None:
+            continue
+        m = _INSTR_RE.match(line)
+        if not m:
+            continue
+        name, shape_text, opcode, rest = m.groups()
+        ins = _Instr(name, shape_text, opcode, rest)
+        cur.instrs.append(ins)
+        cur.by_name[name] = ins
+    return comps
+
+
+def _operand_names(rest: str) -> list[str]:
+    """Names referenced in the operand list (up to the closing paren)."""
+    depth, i = 1, 0
+    while i < len(rest) and depth:
+        if rest[i] == "(":
+            depth += 1
+        elif rest[i] == ")":
+            depth -= 1
+        i += 1
+    return re.findall(r"%([\w.-]+)", rest[:i])
+
+
+def _attr_comp_refs(rest: str) -> dict[str, list[str]]:
+    """computation-valued attributes after the operand list."""
+    refs = defaultdict(list)
+    for key, val in re.findall(r"(\w+)=%([\w.-]+)", rest):
+        refs[key].append(val)
+    for m in re.finditer(r"(\w+)=\{([^}]*)\}", rest):
+        key, body = m.groups()
+        names = re.findall(r"%([\w.-]+)", body)
+        if names:
+            refs[key].extend(names)
+    return refs
+
+
+def _trip_count(cond: _Comp) -> int:
+    """Largest integer constant in the loop condition; exact for scan."""
+    best = 1
+    for ins in cond.instrs:
+        if ins.opcode == "constant":
+            m = re.match(r"\s*(\d+)\s*\)", ins.rest)
+            if m:
+                best = max(best, int(m.group(1)))
+    return best
+
+
+def _dot_flops(ins: _Instr, comp: _Comp) -> float:
+    out_elems, _ = _shape_elems_bytes(ins.shape_text)
+    ops = _operand_names(ins.rest)
+    k = 1.0
+    m = re.search(r"lhs_contracting_dims=\{([0-9,]*)\}", ins.rest)
+    if m and ops:
+        lhs = comp.by_name.get(ops[0])
+        if lhs is not None:
+            dims_m = _SHAPE_RE.search(lhs.shape_text)
+            if dims_m:
+                lhs_dims = [int(d) for d in dims_m.group(2).split(",") if d]
+                for ci in m.group(1).split(","):
+                    if ci and int(ci) < len(lhs_dims):
+                        k *= lhs_dims[int(ci)]
+    return 2.0 * out_elems * k
+
+
+# Ops whose operands/results genuinely stream through HBM on TPU.  Plain
+# elementwise chains (add/mul/convert/select/broadcast/...) fuse into these
+# neighbours on TPU, so counting every CPU-HLO instruction (CPU barely
+# fuses) inflates the memory term ~4x — found when the first roofline pass
+# classified every cell as memory-bound (EXPERIMENTS.md §Roofline notes).
+_BYTES_OPS = {
+    "dot", "convolution", "fusion", "gather", "scatter", "dynamic-slice",
+    "dynamic-update-slice", "sort", "reduce", "reduce-window", "custom-call",
+    "concatenate", "pad", "transpose", "copy", "reverse", "cholesky",
+    "triangular-solve", "fft", "rng", "select-and-scatter", "scatter-add",
+}
+
+
+def _operand_bytes_normalised(name: str, comp: _Comp) -> float:
+    """Bytes of operand ``name``; if it is a convert/copy of a narrower
+    value (XLA CPU promotes bf16 compute to f32), charge the narrower
+    width — TPU reads the bf16 original."""
+    ref = comp.by_name.get(name)
+    if ref is None:
+        return 0.0
+    _, b = _shape_elems_bytes(ref.shape_text)
+    if ref.opcode in ("convert", "copy", "bitcast"):
+        srcs = _operand_names(ref.rest)
+        if srcs:
+            src = comp.by_name.get(srcs[0])
+            if src is not None:
+                _, sb = _shape_elems_bytes(src.shape_text)
+                if 0 < sb < b:
+                    return sb
+    return b
+
+
+def _instr_bytes(ins: _Instr, comp: _Comp) -> float:
+    if ins.opcode in _SKIP_BYTES or ins.opcode in _COLLECTIVES:
+        return 0.0
+    if ins.opcode not in _BYTES_OPS:
+        return 0.0  # assumed fused on TPU
+    _, out_b = _shape_elems_bytes(ins.shape_text)
+    ops = _operand_names(ins.rest)
+    # indexed ops touch only the gathered/updated rows, not the whole
+    # operand (a replicated 1.4 GiB embedding table must not count as
+    # streamed per lookup — found on fm:serve_bulk):
+    if ins.opcode in ("gather", "dynamic-slice"):
+        idx_b = sum(
+            b for op in ops[1:] for b in [_operand_bytes_normalised(op, comp)]
+        )
+        return 2.0 * out_b + idx_b  # rows read + result written + indices
+    if ins.opcode == "dynamic-update-slice":
+        # operands: (buffer, update, idx...) — buffer is aliased, not streamed
+        upd_b = (
+            _operand_bytes_normalised(ops[1], comp) if len(ops) > 1 else out_b
+        )
+        return 2.0 * upd_b
+    if ins.opcode in ("scatter", "scatter-add", "select-and-scatter"):
+        # operands: (buffer, indices, updates)
+        upd_b = (
+            _operand_bytes_normalised(ops[2], comp) if len(ops) > 2 else out_b
+        )
+        idx_b = _operand_bytes_normalised(ops[1], comp) if len(ops) > 1 else 0.0
+        return 2.0 * upd_b + idx_b  # touched rows read-modify-write + indices
+    in_b = 0.0
+    for op in ops:
+        in_b += _operand_bytes_normalised(op, comp)
+    return out_b + in_b
+
+
+def _collective_operand_bytes(ins: _Instr, comp: _Comp) -> float:
+    total = 0.0
+    for op in _operand_names(ins.rest):
+        ref = comp.by_name.get(op)
+        if ref is not None:
+            _, b = _shape_elems_bytes(ref.shape_text)
+            total += b
+    if total == 0.0:  # operands carried inline shapes (older dumps)
+        _, total = _shape_elems_bytes(ins.rest.split(")")[0])
+    return total
+
+
+def analyse_hlo(hlo: str, entry_hint: str | None = None) -> dict:
+    comps = parse_module(hlo)
+    if not comps:
+        return {
+            "flops": 0.0, "bytes": 0.0, "transcendentals": 0.0,
+            "collective_bytes": 0.0, "collectives": {}, "max_multiplier": 1,
+        }
+    # entry = computation never referenced by others
+    referenced = set()
+    for comp in comps.values():
+        for ins in comp.instrs:
+            for names in _attr_comp_refs(ins.rest).values():
+                referenced.update(names)
+    entries = [n for n in comps if n not in referenced]
+    entry = entry_hint or (entries[-1] if entries else next(iter(comps)))
+
+    flops = trans = nbytes = coll_bytes = 0.0
+    coll_by_kind: dict[str, dict] = defaultdict(lambda: {"count": 0, "bytes": 0.0})
+    max_mult = 1
+    seen: set[tuple[str, int]] = set()
+
+    def visit(comp_name: str, mult: float, count_bytes: bool):
+        nonlocal flops, trans, nbytes, coll_bytes, max_mult
+        comp = comps.get(comp_name)
+        if comp is None:
+            return
+        key = (comp_name, int(mult))
+        if key in seen:  # same computation at same multiplier (shared callees)
+            return
+        seen.add(key)
+        max_mult = max(max_mult, int(mult))
+        for ins in comp.instrs:
+            op = ins.opcode
+            if op == "dot":
+                flops += mult * _dot_flops(ins, comp)
+            elif op == "convolution":
+                flops += mult * 2.0 * _shape_elems_bytes(ins.shape_text)[0]
+            elif op in _ELEMENTWISE_1FLOP:
+                flops += mult * _shape_elems_bytes(ins.shape_text)[0]
+            elif op in _TRANSCENDENTAL:
+                trans += mult * _shape_elems_bytes(ins.shape_text)[0]
+            if count_bytes:
+                nbytes += mult * _instr_bytes(ins, comp)
+            base = op[:-6] if op.endswith("-start") else op
+            if base in _COLLECTIVES:
+                b = _collective_operand_bytes(ins, comp)
+                coll_bytes += mult * b
+                coll_by_kind[base]["count"] += int(mult)
+                coll_by_kind[base]["bytes"] += mult * b
+            # recurse into called computations
+            refs = _attr_comp_refs(ins.rest)
+            if op == "while":
+                trip = 1
+                for cname in refs.get("condition", []):
+                    trip = max(trip, _trip_count(comps[cname]))
+                for cname in refs.get("body", []):
+                    visit(cname, mult * trip, count_bytes)
+            elif op == "fusion":
+                for cname in refs.get("calls", []):
+                    visit(cname, mult, False)  # fusion bytes = boundary only
+            elif op in ("call", "async-start", "custom-call"):
+                for cname in refs.get("to_apply", []) + refs.get("called_computations", []):
+                    visit(cname, mult, count_bytes)
+            elif op == "conditional":
+                branches = (
+                    refs.get("branch_computations", [])
+                    + refs.get("true_computation", [])
+                    + refs.get("false_computation", [])
+                )
+                for cname in branches:
+                    visit(cname, mult, count_bytes)
+            # reduce/map/scatter/sort to_apply bodies are O(1)-per-element —
+            # covered by the elementwise estimate of the parent op; skip.
+
+    visit(entry, 1.0, True)
+    return {
+        "flops": flops,
+        "bytes": nbytes,
+        "transcendentals": trans,
+        "collective_bytes": coll_bytes,
+        "collectives": dict(coll_by_kind),
+        "max_multiplier": max_mult,
+        "entry": entry,
+    }

@@ -1,0 +1,90 @@
+"""Collective-traffic extraction from compiled (SPMD-partitioned) HLO text.
+
+``cost_analysis()`` has no collective-bytes entry, so the roofline's third
+term is derived here: we scan the partitioned module for every
+``all-gather`` / ``all-reduce`` / ``reduce-scatter`` / ``all-to-all`` /
+``collective-permute`` instruction and sum the byte sizes of its *operands*
+(per the assignment's metric).  The module is the per-device program, so all
+numbers are bytes **per chip**; the roofline divides by per-link bandwidth.
+
+Parsing is purely textual: an HLO instruction line looks like
+
+  %all-reduce.5 = f32[16,128]{1,0} all-reduce(f32[16,128]{1,0} %add.3), ...
+
+Async pairs (``all-reduce-start``/``-done``) are counted once (on ``-start``).
+"""
+
+from __future__ import annotations
+
+import re
+from collections import defaultdict
+
+_DTYPE_BYTES = {
+    "pred": 1, "s4": 0.5, "u4": 0.5, "s8": 1, "u8": 1,
+    "f8e4m3fn": 1, "f8e5m2": 1, "f8e4m3b11fnuz": 1, "f8e4m3fnuz": 1, "f8e5m2fnuz": 1,
+    "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4,
+    "s64": 8, "u64": 8, "f64": 8, "c64": 8, "c128": 16,
+}
+
+_COLLECTIVES = (
+    "all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+    "collective-permute", "collective-broadcast", "ragged-all-to-all",
+)
+
+# `<dtype>[d0,d1,...]` — layout `{...}` optional, dims may be empty (scalar).
+_SHAPE_RE = re.compile(r"\b([a-z][a-z0-9]*)\[([0-9,]*)\]")
+
+# opcode position: `<result> = <shape-or-tuple> <opcode>(<operands...>)`
+_OP_RE = re.compile(
+    r"=\s*(?:\([^)]*\)|\S+)\s+(" + "|".join(_COLLECTIVES) + r")(-start)?\("
+)
+
+
+def shape_bytes(dtype: str, dims_csv: str) -> float:
+    n = 1
+    if dims_csv:
+        for d in dims_csv.split(","):
+            n *= int(d)
+    return n * _DTYPE_BYTES.get(dtype, 4)
+
+
+def _operand_bytes(line: str, open_idx: int) -> float:
+    """Sum shapes appearing in the operand list starting at ``open_idx``."""
+    depth, i = 0, open_idx
+    while i < len(line):
+        c = line[i]
+        if c == "(":
+            depth += 1
+        elif c == ")":
+            depth -= 1
+            if depth == 0:
+                break
+        i += 1
+    operands = line[open_idx : i + 1]
+    return sum(shape_bytes(d, s) for d, s in _SHAPE_RE.findall(operands))
+
+
+def collective_stats(hlo_text: str) -> dict:
+    """Return {op_kind: {count, bytes}} + totals (bytes are per-device)."""
+    by_kind: dict[str, dict] = defaultdict(lambda: {"count": 0, "bytes": 0.0})
+    for line in hlo_text.splitlines():
+        m = _OP_RE.search(line)
+        if not m:
+            continue
+        kind = m.group(1)
+        open_idx = line.index("(", m.start(1))
+        nbytes = _operand_bytes(line, open_idx)
+        by_kind[kind]["count"] += 1
+        by_kind[kind]["bytes"] += nbytes
+    total = sum(v["bytes"] for v in by_kind.values())
+    count = sum(v["count"] for v in by_kind.values())
+    return {"by_kind": dict(by_kind), "total_bytes": total, "total_count": count}
+
+
+def duplicate_op_histogram(hlo_text: str, top: int = 12) -> list[tuple[str, int]]:
+    """Count fusion-root op names — a remat/redundancy smell test (§Perf)."""
+    counts: dict[str, int] = defaultdict(int)
+    for m in re.finditer(r"=\s*(?:\([^)]*\)|\S+)\s+([a-z][a-z0-9-]*)\(", hlo_text):
+        counts[m.group(1)] += 1
+    return sorted(counts.items(), key=lambda kv: -kv[1])[:top]

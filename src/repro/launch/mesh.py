@@ -1,0 +1,42 @@
+"""Production mesh construction.
+
+``make_production_mesh`` is a FUNCTION (not a module-level constant) so that
+importing this module never touches jax device state — the dry-run must be
+able to set ``XLA_FLAGS`` before the first jax call.
+
+Axes:
+  * ``pod``   — pure data parallelism across pods (DCN); gradients cross it
+                once per step,
+  * ``data``  — batch / edge / row sharding (ICI),
+  * ``model`` — tensor/expert/vocab/embedding-row parallelism (ICI).
+"""
+
+from __future__ import annotations
+
+import jax
+
+
+def _auto(n):
+    return (jax.sharding.AxisType.Auto,) * n
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes, axis_types=_auto(len(axes)))
+
+
+def make_engine_mesh(n_devices: int | None = None, axis: str = "data"):
+    """1-D mesh for the SPMD materialisation engine."""
+    n = n_devices or len(jax.devices())
+    return jax.make_mesh((n,), (axis,), axis_types=_auto(1))
+
+
+def data_axes(mesh) -> tuple[str, ...]:
+    """All batch-parallel axes of a mesh (pod + data when present)."""
+    names = mesh.axis_names
+    return tuple(a for a in ("pod", "data") if a in names)
+
+
+def model_axis(mesh) -> str | None:
+    return "model" if "model" in mesh.axis_names else None

@@ -1,0 +1,150 @@
+"""Roofline analysis over the dry-run artifacts (single-pod mesh).
+
+Reads ``artifacts/dryrun/*__single.json`` and derives, per (arch x shape):
+
+  compute_s    = HLO_FLOPs_per_dev   / peak_FLOP/s        (197 TF/s bf16)
+  memory_s     = HLO_bytes_per_dev   / HBM_bw             (819 GB/s)
+  collective_s = coll_bytes_per_dev  / ICI link bw        (50 GB/s)
+
+All inputs are per-chip numbers taken from the partitioned SPMD module, so
+dividing by per-chip peaks is equivalent to the assignment's
+``global / (chips x peak)`` form.  Additionally:
+
+  model_flops_ratio = MODEL_FLOPS / (HLO_FLOPs_per_dev x chips)
+      — how much compiled compute is "useful" (remat/dup waste shows here),
+  roofline_frac = useful-compute-time / dominant-term
+      — the score: 1.0 means the step runs at the hardware roofline on its
+        dominant resource while doing only model math.
+
+Usage:
+  python -m repro.launch.roofline [--dir artifacts/dryrun] [--mesh single]
+  python -m repro.launch.roofline --markdown > roofline.md
+"""
+
+from __future__ import annotations
+
+import argparse
+import glob
+import json
+import os
+
+from repro.launch.dryrun import ART_DIR, HW
+
+
+def load_cells(art_dir: str, mesh: str = "single") -> list[dict]:
+    cells = []
+    for path in sorted(glob.glob(os.path.join(art_dir, f"*__{mesh}.json"))):
+        with open(path) as f:
+            cells.append(json.load(f))
+    return cells
+
+
+# ring-algorithm wire factors per operand byte: all-reduce moves ~2x
+# (reduce-scatter + all-gather phases); others ~1x.  Makes all-reduce ->
+# reduce-scatter rewrites visible in the collective term.
+WIRE_WEIGHT = {"all-reduce": 2.0}
+
+
+def analyse(rec: dict) -> dict | None:
+    if rec.get("status") != "ok":
+        return None
+    n = rec["n_devices"]
+    flops = rec["cost"]["flops_per_dev"]
+    mem_bytes = rec["cost"]["bytes_per_dev"]
+    coll = sum(
+        v["bytes"] * WIRE_WEIGHT.get(k, 1.0)
+        for k, v in rec["collectives"]["by_kind"].items()
+    )
+    compute_s = flops / HW["peak_flops_bf16"]
+    memory_s = mem_bytes / HW["hbm_bytes_per_s"]
+    collective_s = coll / HW["ici_bytes_per_s_per_link"]
+    terms = {"compute": compute_s, "memory": memory_s, "collective": collective_s}
+    dominant = max(terms, key=terms.get)
+    model_flops = rec.get("model_flops_global", 0.0)
+    hlo_global = flops * n
+    useful_s = model_flops / (n * HW["peak_flops_bf16"])
+    dom_s = terms[dominant]
+    return {
+        "cell": f"{rec['arch']}:{rec['shape']}",
+        "mesh": rec["mesh"],
+        "n_devices": n,
+        "compute_s": compute_s,
+        "memory_s": memory_s,
+        "collective_s": collective_s,
+        "dominant": dominant,
+        "model_flops": model_flops,
+        "hlo_flops_global": hlo_global,
+        "model_flops_ratio": (model_flops / hlo_global) if hlo_global else 0.0,
+        "roofline_frac": (useful_s / dom_s) if dom_s > 0 else 0.0,
+        "peak_mem_gib": rec["memory"]["peak_bytes"] / 2**30,
+        "fits_hbm": rec["memory"]["fits_hbm"],
+        "tpu_mem_gib": rec["memory"].get("tpu_est_bytes", rec["memory"]["peak_bytes"]) / 2**30,
+        "fits_tpu": rec["memory"].get("fits_hbm_tpu_est", rec["memory"]["fits_hbm"]),
+        "coll_by_kind": {
+            k: v["bytes"] for k, v in rec["collectives"]["by_kind"].items()
+        },
+    }
+
+
+def fmt_s(x: float) -> str:
+    if x >= 1.0:
+        return f"{x:.2f}s"
+    if x >= 1e-3:
+        return f"{x*1e3:.2f}ms"
+    return f"{x*1e6:.1f}us"
+
+
+def markdown_table(rows: list[dict], skipped: list[dict]) -> str:
+    out = [
+        "| cell | devs | compute | memory | collective | dominant | "
+        "model/HLO FLOPs | roofline frac | mem GiB (fits) | TPU-est GiB (fits) |",
+        "|---|---|---|---|---|---|---|---|---|---|",
+    ]
+    for r in rows:
+        out.append(
+            f"| {r['cell']} | {r['n_devices']} | {fmt_s(r['compute_s'])} "
+            f"| {fmt_s(r['memory_s'])} | {fmt_s(r['collective_s'])} "
+            f"| **{r['dominant']}** | {r['model_flops_ratio']:.2f} "
+            f"| {r['roofline_frac']:.3f} "
+            f"| {r['peak_mem_gib']:.2f} ({'y' if r['fits_hbm'] else 'N'}) "
+            f"| {r['tpu_mem_gib']:.2f} ({'y' if r['fits_tpu'] else 'N'}) |"
+        )
+    for s in skipped:
+        out.append(
+            f"| {s['arch']}:{s['shape']} | — | — | — | — | — | — | — | "
+            f"skipped: {s.get('skip_reason','')[:60]} |"
+        )
+    return "\n".join(out)
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--dir", default=os.path.abspath(ART_DIR))
+    ap.add_argument("--mesh", default="single")
+    ap.add_argument("--markdown", action="store_true")
+    ap.add_argument("--json", action="store_true")
+    args = ap.parse_args()
+
+    cells = load_cells(args.dir, args.mesh)
+    rows, skipped, errors = [], [], []
+    for rec in cells:
+        if rec.get("status") == "skipped":
+            skipped.append(rec)
+        elif rec.get("status") == "error":
+            errors.append(rec)
+        else:
+            a = analyse(rec)
+            if a:
+                rows.append(a)
+    if args.json:
+        print(json.dumps(rows, indent=1))
+        return
+    print(markdown_table(rows, skipped))
+    if errors:
+        print(f"\n{len(errors)} cells in error state:")
+        for e in errors:
+            print(f"  {e['arch']}:{e['shape']}:{e['mesh']}")
+
+
+if __name__ == "__main__":
+    main()

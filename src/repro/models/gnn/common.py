@@ -1,0 +1,88 @@
+"""Shared GNN machinery: segment-op message passing over edge indices.
+
+JAX sparse is BCOO-only, so message passing is built on
+``jax.ops.segment_sum``-family reductions over an (2, E) edge index — this IS
+part of the system per the assignment.  The Pallas ``segment_sum`` kernel
+(:mod:`repro.kernels.segment_sum`) is the TPU hot-path for the sum case.
+
+Edge-parallel distribution: edges are sharded over the data axes; segment
+reductions into replicated node states lower to local partial sums + psum
+under SPMD (DESIGN.md §6).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def seg_sum(x, seg, n):
+    return jax.ops.segment_sum(x, seg, num_segments=n)
+
+
+def seg_mean(x, seg, n, eps=1e-6):
+    s = seg_sum(x, seg, n)
+    d = seg_sum(jnp.ones((x.shape[0], 1), x.dtype), seg, n)
+    return s / (d + eps)
+
+
+def _mask_empty(agg, seg, n):
+    """Zero out segments with no contributing edges (identity is +-inf)."""
+    cnt = seg_sum(jnp.ones((seg.shape[0], 1), agg.dtype), seg, n)
+    return jnp.where(cnt > 0, agg, 0.0)
+
+
+def seg_max(x, seg, n):
+    out = jax.ops.segment_max(x, seg, num_segments=n, indices_are_sorted=False)
+    return _mask_empty(out, seg, n)
+
+
+def seg_min(x, seg, n):
+    out = jax.ops.segment_min(x, seg, num_segments=n, indices_are_sorted=False)
+    return _mask_empty(out, seg, n)
+
+
+def seg_std(x, seg, n, eps=1e-6):
+    m = seg_mean(x, seg, n)
+    m2 = seg_mean(x * x, seg, n)
+    return jnp.sqrt(jnp.maximum(m2 - m[..., :] ** 2, 0.0) + eps)
+
+
+def seg_softmax(logits, seg, n):
+    """Edge softmax grouped by destination node."""
+    mx = seg_max(logits, seg, n)
+    ex = jnp.exp(logits - mx[seg])
+    den = seg_sum(ex, seg, n)
+    return ex / (den[seg] + 1e-9)
+
+
+def degrees(dst, n):
+    return seg_sum(jnp.ones((dst.shape[0], 1), jnp.float32), dst, n)[:, 0]
+
+
+def mlp(params: list, x, act=jax.nn.silu):
+    for i, (w, b) in enumerate(params):
+        x = x @ w.astype(x.dtype) + b.astype(x.dtype)
+        if i < len(params) - 1:
+            x = act(x)
+    return x
+
+
+def init_mlp(rng, dims, dtype=jnp.float32):
+    out = []
+    keys = jax.random.split(rng, len(dims) - 1)
+    for k, (a, b) in zip(keys, zip(dims[:-1], dims[1:])):
+        out.append(
+            (
+                jax.random.normal(k, (a, b), jnp.float32).astype(dtype) * (a**-0.5),
+                jnp.zeros((b,), dtype),
+            )
+        )
+    return out
+
+
+def layer_norm(x, eps=1e-5):
+    xf = x.astype(jnp.float32)
+    m = xf.mean(-1, keepdims=True)
+    v = xf.var(-1, keepdims=True)
+    return ((xf - m) * jax.lax.rsqrt(v + eps)).astype(x.dtype)

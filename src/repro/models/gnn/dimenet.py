@@ -1,0 +1,128 @@
+"""DimeNet — directional message passing (Gasteiger et al., arXiv:2003.03123).
+
+Messages live on *directed edges*; the interaction block aggregates over
+triplets (k->j->i) with a radial Bessel basis on distances and an angular
+basis on the k-j-i angle, combined through an ``n_bilinear`` tensor layer —
+the triplet-gather kernel regime of the taxonomy (not expressible as SpMM).
+
+Compact-faithful deviations (documented in DESIGN.md):
+  * the angular basis uses cos(l * angle) Chebyshev harmonics x radial Bessel
+    instead of full spherical Bessel j_l(z_ln r) x Y_l — same tensor shapes
+    (n_spherical x n_radial), same triplet dataflow, simpler special
+    functions,
+  * output blocks use per-edge MLPs + atom scatter like DimeNet++.
+
+Triplet indices (t_in: edge k->j, t_out: edge j->i) are precomputed by the
+data pipeline and are part of the batch (static count).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from .common import init_mlp, mlp, seg_sum
+
+
+@dataclasses.dataclass(frozen=True)
+class DimeNetConfig:
+    name: str = "dimenet"
+    n_blocks: int = 6
+    d_hidden: int = 128
+    n_bilinear: int = 8
+    n_spherical: int = 7
+    n_radial: int = 6
+    cutoff: float = 5.0
+    n_species: int = 16
+    envelope_p: int = 6
+
+
+def radial_bessel(d, n_radial, cutoff, p=6):
+    """Bessel RBF with smooth polynomial envelope (DimeNet eq. 7-8)."""
+    d = d / cutoff
+    n = jnp.arange(1, n_radial + 1, dtype=jnp.float32)
+    # envelope u(d): 1 + a d^p + b d^(p+1) + c d^(p+2)
+    a = -(p + 1) * (p + 2) / 2.0
+    b = p * (p + 2)
+    c = -p * (p + 1) / 2.0
+    env = 1.0 + a * d**p + b * d ** (p + 1) + c * d ** (p + 2)
+    env = jnp.where(d < 1.0, env, 0.0)
+    return env[:, None] * jnp.sqrt(2.0 / cutoff) * jnp.sin(n * jnp.pi * d[:, None]) / jnp.maximum(d[:, None], 1e-6)
+
+
+def angular_basis(angle, d, n_spherical, n_radial, cutoff):
+    """(T, n_spherical * n_radial): cos(l*angle) x radial Bessel of d_kj."""
+    rbf = radial_bessel(d, n_radial, cutoff)  # (T, n_radial)
+    l = jnp.arange(n_spherical, dtype=jnp.float32)
+    ang = jnp.cos(l[None, :] * angle[:, None])  # (T, n_spherical)
+    return (ang[:, :, None] * rbf[:, None, :]).reshape(angle.shape[0], -1)
+
+
+def init_params(rng, cfg: DimeNetConfig) -> dict:
+    ks = jax.random.split(rng, 6 + cfg.n_blocks)
+    h, nb = cfg.d_hidden, cfg.n_bilinear
+    nsr = cfg.n_spherical * cfg.n_radial
+    blocks = []
+    for i in range(cfg.n_blocks):
+        bk = jax.random.split(ks[6 + i], 6)
+        blocks.append(
+            {
+                "w_rbf": init_mlp(bk[0], [cfg.n_radial, h])[0][0],
+                "w_sbf": init_mlp(bk[1], [nsr, nb])[0][0],
+                "w_kj": init_mlp(bk[2], [h, h])[0][0],
+                "bilinear": jax.random.normal(bk[3], (h, nb, h), jnp.float32) * (h**-0.5),
+                "mlp_out": init_mlp(bk[4], [h, h, h]),
+                "out_atom": init_mlp(bk[5], [h, h, 1]),
+            }
+        )
+    return {
+        "species_emb": jax.random.normal(ks[0], (cfg.n_species, h), jnp.float32) * 0.1,
+        "edge_mlp": init_mlp(ks[1], [2 * h + cfg.n_radial, h, h]),
+        "blocks": blocks,
+    }
+
+
+def forward(params, cfg: DimeNetConfig, batch: dict):
+    """batch: z (N,) species, pos (N,3), edge_index (2,E) j->i,
+    triplets (2,T) = (edge id k->j, edge id j->i), graph_ids, n_graphs."""
+    z, pos = batch["z"], batch["pos"].astype(jnp.float32)
+    src, dst = batch["edge_index"][0], batch["edge_index"][1]
+    t_in, t_out = batch["triplets"][0], batch["triplets"][1]
+    n, e = z.shape[0], src.shape[0]
+
+    rel = pos[dst] - pos[src]
+    d = jnp.sqrt(jnp.maximum((rel * rel).sum(-1), 1e-12))
+    rbf = radial_bessel(d, cfg.n_radial, cfg.cutoff, cfg.envelope_p)
+
+    # triplet angle between edge (k->j) and (j->i): vectors meet at j
+    v_kj = -rel[t_in]  # j->k direction flipped: k->j
+    v_ji = rel[t_out]
+    cosang = (v_kj * v_ji).sum(-1) / jnp.maximum(
+        jnp.linalg.norm(v_kj, axis=-1) * jnp.linalg.norm(v_ji, axis=-1), 1e-9
+    )
+    angle = jnp.arccos(jnp.clip(cosang, -1.0, 1.0))
+    sbf = angular_basis(angle, d[t_in], cfg.n_spherical, cfg.n_radial, cfg.cutoff)
+
+    hz = params["species_emb"][z]
+    m = mlp(params["edge_mlp"], jnp.concatenate([hz[src], hz[dst], rbf], -1))  # (E, H)
+
+    energy = jnp.zeros((batch["n_graphs"], 1), jnp.float32)
+    for blk in params["blocks"]:
+        m_rbf = m * (rbf @ blk["w_rbf"])  # (E, H)
+        m_kj = (m_rbf @ blk["w_kj"])[t_in]  # (T, H)
+        sb = sbf @ blk["w_sbf"]  # (T, nb)
+        inter = jnp.einsum("th,tb,hbo->to", m_kj, sb, blk["bilinear"])  # (T, H)
+        agg = seg_sum(inter, t_out, e)  # (E, H)
+        m = m + mlp(blk["mlp_out"], agg)
+        atom = seg_sum(m, dst, n)  # (N, H)
+        contrib = mlp(blk["out_atom"], atom)  # (N, 1)
+        energy = energy + seg_sum(contrib.astype(jnp.float32), batch["graph_ids"], batch["n_graphs"])
+    return energy[:, 0]
+
+
+def loss_fn(params, cfg: DimeNetConfig, batch: dict):
+    pred = forward(params, cfg, batch)
+    err = pred - batch["y"].astype(jnp.float32)
+    return (err * err).mean()

@@ -1,0 +1,73 @@
+"""EGNN — E(n)-equivariant GNN (Satorras et al., arXiv:2102.09844).
+
+    m_ij  = phi_e(h_i, h_j, ||x_i - x_j||^2)
+    x_i' += C * sum_j (x_i - x_j) * phi_x(m_ij)
+    h_i'  = phi_h(h_i, sum_j m_ij)
+
+Equivariance comes from using only squared distances and relative vectors.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from .common import init_mlp, mlp, seg_sum
+
+
+@dataclasses.dataclass(frozen=True)
+class EGNNConfig:
+    name: str = "egnn"
+    n_layers: int = 4
+    d_hidden: int = 64
+    d_in: int = 16
+    n_targets: int = 1
+
+
+def init_params(rng, cfg: EGNNConfig) -> dict:
+    ks = jax.random.split(rng, 3 + cfg.n_layers)
+    h = cfg.d_hidden
+    layers = []
+    for i in range(cfg.n_layers):
+        lk = jax.random.split(ks[3 + i], 3)
+        layers.append(
+            {
+                "phi_e": init_mlp(lk[0], [2 * h + 1, h, h]),
+                "phi_x": init_mlp(lk[1], [h, h, 1]),
+                "phi_h": init_mlp(lk[2], [2 * h, h, h]),
+            }
+        )
+    return {
+        "embed": init_mlp(ks[0], [cfg.d_in, h]),
+        "layers": layers,
+        "head": init_mlp(ks[1], [h, h, cfg.n_targets]),
+    }
+
+
+def forward(params, cfg: EGNNConfig, batch: dict):
+    """Returns (per-graph prediction, final positions)."""
+    h = mlp(params["embed"], batch["x"])
+    pos = batch["pos"].astype(jnp.float32)
+    src, dst = batch["edge_index"][0], batch["edge_index"][1]
+    n = h.shape[0]
+    for lp in params["layers"]:
+        rel = pos[dst] - pos[src]
+        d2 = (rel * rel).sum(-1, keepdims=True)
+        m = mlp(lp["phi_e"], jnp.concatenate([h[dst], h[src], d2.astype(h.dtype)], -1))
+        w = mlp(lp["phi_x"], m).astype(jnp.float32)
+        pos = pos + seg_sum(rel * w, dst, n) / (n**0.5)
+        agg = seg_sum(m, dst, n)
+        h = h + mlp(lp["phi_h"], jnp.concatenate([h, agg], -1))
+    node_out = mlp(params["head"], h)
+    gid = batch["graph_ids"]
+    n_graphs = batch["n_graphs"]
+    pred = seg_sum(node_out, gid, n_graphs)
+    return pred, pos
+
+
+def loss_fn(params, cfg: EGNNConfig, batch: dict):
+    pred, _ = forward(params, cfg, batch)
+    err = pred[:, 0].astype(jnp.float32) - batch["y"].astype(jnp.float32)
+    return (err * err).mean()

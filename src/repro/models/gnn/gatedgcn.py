@@ -1,0 +1,80 @@
+"""GatedGCN (Bresson & Laurent, arXiv:1711.07553; benchmark config from
+arXiv:2003.00982): edge-gated message passing with residuals.
+
+    e'_ij = A h_i + B h_j + C e_ij
+    eta_ij = sigma(e'_ij) / (sum_j' sigma(e'_ij') + eps)
+    h'_i  = U h_i + sum_j eta_ij * (V h_j)
+
+LayerNorm replaces the original BatchNorm (batch statistics are hostile to
+SPMD sharding; documented deviation).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from .common import init_mlp, layer_norm, mlp, seg_sum
+
+
+@dataclasses.dataclass(frozen=True)
+class GatedGCNConfig:
+    name: str = "gatedgcn"
+    n_layers: int = 16
+    d_hidden: int = 70
+    d_in: int = 1433
+    d_edge_in: int = 1
+    n_classes: int = 40
+
+
+def init_params(rng, cfg: GatedGCNConfig) -> dict:
+    ks = jax.random.split(rng, 4 + cfg.n_layers)
+    h = cfg.d_hidden
+    layers = []
+    for i in range(cfg.n_layers):
+        lk = jax.random.split(ks[4 + i], 6)
+        layers.append(
+            {
+                "A": init_mlp(lk[0], [h, h])[0],
+                "B": init_mlp(lk[1], [h, h])[0],
+                "C": init_mlp(lk[2], [h, h])[0],
+                "U": init_mlp(lk[3], [h, h])[0],
+                "V": init_mlp(lk[4], [h, h])[0],
+            }
+        )
+    return {
+        "embed_x": init_mlp(ks[0], [cfg.d_in, h]),
+        "embed_e": init_mlp(ks[1], [cfg.d_edge_in, h]),
+        "layers": layers,
+        "head": init_mlp(ks[2], [h, h, cfg.n_classes]),
+    }
+
+
+def forward(params, cfg: GatedGCNConfig, batch: dict) -> jnp.ndarray:
+    x = mlp(params["embed_x"], batch["x"])
+    e = mlp(params["embed_e"], batch["edge_attr"])
+    src, dst = batch["edge_index"][0], batch["edge_index"][1]
+    n = x.shape[0]
+    for lp in params["layers"]:
+        (aw, ab), (bw, bb), (cw, cb) = lp["A"], lp["B"], lp["C"]
+        (uw, ub), (vw, vb) = lp["U"], lp["V"]
+        e_new = x[dst] @ aw + x[src] @ bw + e @ cw + (ab + bb + cb)
+        gate = jax.nn.sigmoid(e_new.astype(jnp.float32)).astype(x.dtype)
+        msg = gate * (x[src] @ vw + vb)
+        den = seg_sum(gate, dst, n) + 1e-6
+        agg = seg_sum(msg, dst, n) / den
+        x = x + jax.nn.silu(layer_norm(x @ uw + ub + agg))
+        e = e + jax.nn.silu(layer_norm(e_new))
+    return mlp(params["head"], x)
+
+
+def loss_fn(params, cfg: GatedGCNConfig, batch: dict):
+    logits = forward(params, cfg, batch).astype(jnp.float32)
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    nll = -jnp.take_along_axis(logp, batch["labels"][:, None], axis=-1)[:, 0]
+    mask = batch.get("train_mask")
+    if mask is not None:
+        return (nll * mask).sum() / jnp.maximum(mask.sum(), 1.0)
+    return nll.mean()

@@ -1,0 +1,148 @@
+"""Mixture-of-Experts FFN with sort-based, shard-local dispatch (EP x DP).
+
+Top-k routing with softmax-renormalised gates.  Dispatch is the production
+bottleneck: the naive one-hot scatter formulation materialises
+O(T x E x cap) index tensors — 161 GiB/device replicated for the 235B config
+at 4k x 256 (measured by the dry-run).  Instead we dispatch per token-chunk
+(one chunk per data shard) with an argsort over expert assignments:
+
+  1. tokens are viewed as (C, T_loc) chunks, C = number of data shards; each
+     chunk sorts its (T_loc x K) expert assignments (stable, so token order
+     within an expert is preserved),
+  2. position-in-expert comes from a binary search of segment starts
+     (``searchsorted``) — O(T_loc log T_loc), no (T,E) one-hots,
+  3. dispatch/combine are chunk-LOCAL gathers into a (C, E, cap, D) buffer
+     sharded (data, model, -, -): the token chunk lives on its data row and
+     is replicated across the model axis, so the gather never crosses
+     shards; the expert GEMM contracts D with both E (model) and C (data)
+     sharded — fully local,
+  4. the only EP collective is the combine gather's all-gather of the
+     expert outputs across the model axis (the top-k slots a chunk reads
+     back) — visible in the dry-run as the per-layer EP boundary.
+
+Per-chunk capacity = T_loc * K * capacity_factor / E (dropless up to the
+factor); overflowing (token, k) pairs are dropped, exactly like the
+capacity-based GShard/Switch dispatch.  Shared experts (DeepSeekMoE) run
+densely in the caller.
+
+With ``n_token_shards=1`` (tests, single device) the same code runs
+unchunked and needs no mesh.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from .layers import swiglu
+
+
+def _round_up(x: int, m: int) -> int:
+    return (x + m - 1) // m * m
+
+
+def moe_ffn(
+    x: jnp.ndarray,  # (B, S, D)
+    router_w: jnp.ndarray,  # (D, E)
+    w_gate: jnp.ndarray,  # (E, D, F)
+    w_in: jnp.ndarray,  # (E, D, F)
+    w_out: jnp.ndarray,  # (E, F, D)
+    top_k: int,
+    capacity_factor: float = 1.25,
+    n_token_shards: int = 1,
+    dp_axes: tuple = (),
+    ep_axis: str | None = None,
+) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Returns (output (B,S,D), aux load-balancing loss)."""
+    b, s, d = x.shape
+    e = router_w.shape[1]
+    n_tok = b * s
+    c = max(1, min(n_token_shards, n_tok))
+    while n_tok % c:
+        c -= 1
+    tl = n_tok // c
+    tk = tl * top_k
+    cap = _round_up(max(8, int(round(tl * top_k * capacity_factor / e))), 8)
+    cap = min(cap, tl)
+
+    def cons(v, *spec):
+        if ep_axis is None:
+            return v
+        return jax.lax.with_sharding_constraint(v, P(*spec))
+
+    dp = dp_axes if dp_axes else None
+
+    xt = cons(x.reshape(c, tl, d), dp, None, None)
+    logits = jnp.einsum(
+        "ctd,de->cte", xt.astype(jnp.float32), router_w.astype(jnp.float32)
+    )
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate_vals, gate_idx = jax.lax.top_k(probs, top_k)  # (C, Tl, K)
+    gate_vals = gate_vals / jnp.maximum(gate_vals.sum(-1, keepdims=True), 1e-9)
+
+    # aux loss (Switch): E * sum_e f_e * p_e  (global over all chunks)
+    me = probs.mean(axis=(0, 1))
+    ce = jnp.zeros((c, e), jnp.float32)
+    ce = jax.vmap(lambda z, i: z.at[i].add(1.0))(ce, gate_idx.reshape(c, tk))
+    aux = e * jnp.sum(me * ce.sum(0) / (n_tok * top_k))
+
+    # --- sort-based dispatch (per chunk) ---
+    flat_e = gate_idx.reshape(c, tk).astype(jnp.int32)
+    order = jnp.argsort(flat_e, axis=1, stable=True).astype(jnp.int32)  # (C, TK)
+    sorted_e = jnp.take_along_axis(flat_e, order, axis=1)
+    # segment starts via binary search; position of slot j inside its expert
+    starts = jax.vmap(
+        lambda se: jnp.searchsorted(se, jnp.arange(e, dtype=jnp.int32), side="left")
+    )(sorted_e).astype(jnp.int32)  # (C, E)
+    pos = jnp.arange(tk, dtype=jnp.int32)[None, :] - jnp.take_along_axis(
+        starts, sorted_e, axis=1
+    )
+    keep = pos < cap
+    slot = jnp.where(keep, sorted_e * cap + pos, e * cap)  # (C, TK); e*cap = drop
+    tok = order // top_k  # (C, TK) token index within chunk
+
+    # slot -> (token, gate) maps (sentinel token tl = zero row); chunk-local
+    # scatters of small int/f32 arrays
+    slot_tok = jnp.full((c, e * cap + 1), tl, jnp.int32)
+    slot_tok = jax.vmap(lambda st, sl, tk_: st.at[sl].set(tk_))(slot_tok, slot, tok)
+    slot_tok = slot_tok[:, : e * cap]
+    sorted_gate = jnp.take_along_axis(
+        gate_vals.reshape(c, tk), order, axis=1
+    )  # (C, TK) gate value of each sorted (token,k) pair
+    slot_gate = jnp.zeros((c, e * cap + 1), jnp.float32)
+    slot_gate = jax.vmap(lambda sg, sl, gv: sg.at[sl].set(gv))(
+        slot_gate, slot, sorted_gate
+    )
+    slot_gate = slot_gate[:, : e * cap]
+
+    # --- dispatch: chunk-local gather into (C, E, cap, D) ---
+    xt_pad = jnp.concatenate([xt, jnp.zeros((c, 1, d), xt.dtype)], axis=1)
+    buf = jnp.take_along_axis(xt_pad, slot_tok[..., None], axis=1)  # (C, E*cap, D)
+    buf = cons(buf.reshape(c, e, cap, d), dp, ep_axis, None, None)
+
+    # --- expert GEMM: E (model) x C (data) sharded, contraction local ---
+    h = jax.vmap(swiglu, in_axes=(1, 0, 0, 0), out_axes=1)(buf, w_gate, w_in, w_out)
+    h = cons(h, dp, ep_axis, None, None)  # (C, E, cap, D)
+
+    # --- combine: gate-weighted SCATTER-ADD of slot contributions ---
+    # A token-side gather materialises a dense (C,TK,D) tensor and GSPMD
+    # all-reduces it un-contracted (8 GiB f32/layer on 235B, measured).  The
+    # scatter-add accumulates into the (C,Tl,D) output directly, so the
+    # cross-model-shard combine is an all-reduce of the small output only.
+    # Accumulate in the activation dtype: per-shard partials are summed
+    # locally (<= top_k adds per token), and the cross-model-shard combine
+    # all-reduce then moves bf16 instead of f32 — half the wire bytes
+    # (§Perf qwen3 H2b; an SP-layout constraint here was REFUTED: GSPMD
+    # kept the f32 all-reduce and added a 3% all-to-all on top).
+    h_flat = h.reshape(c, e * cap, d)
+    contrib = h_flat * slot_gate[..., None].astype(h_flat.dtype)
+    out = jnp.zeros((c, tl + 1, d), x.dtype)
+    out = jax.vmap(lambda o, st, cb: o.at[st].add(cb, mode="drop"))(
+        out, slot_tok, contrib.astype(x.dtype)
+    )
+    # slice the sentinel row BEFORE the sharding constraint: the combine
+    # all-reduce otherwise carries (Tl+1) rows (measured f32[1,65537,4096]
+    # on 235B — the sentinel crossed the wire 94 times per step)
+    out = cons(out[:, :tl, :], dp, None, None)
+    return out.reshape(b, s, d), aux

@@ -1,0 +1,100 @@
+"""Factorisation Machine (Rendle, ICDM'10) with huge sharded embedding tables.
+
+The hot path is the embedding LOOKUP: JAX has no EmbeddingBag, so lookups are
+``jnp.take`` over a row-sharded table (per-field offsets into one arena) and
+the pairwise interaction uses the O(F*K) sum-square trick — served by the
+fused Pallas kernel :mod:`repro.kernels.fm_interact` on the forward path.
+
+owl:sameAs integration (DESIGN.md §4): an optional ``rho`` row-remap unifies
+equivalent IDs (merged user/item registrations) before lookup — one extra
+gather, after which merged IDs share one embedding row and its gradients.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.kernels import ops as kops
+
+
+@dataclasses.dataclass(frozen=True)
+class FMConfig:
+    name: str = "fm"
+    n_fields: int = 39
+    embed_dim: int = 10
+    rows_per_field: int = 865_707  # ~33.8M total rows, Criteo-scale
+    use_pallas: bool = False  # pure-jnp interaction by default (autodiff path)
+
+    @property
+    def n_rows(self) -> int:
+        # padded to a multiple of 2048 so the row-sharded table divides the
+        # model axis on any production mesh (16-way TP x any pod count)
+        raw = self.n_fields * self.rows_per_field
+        return (raw + 2047) // 2048 * 2048
+
+    def param_count(self) -> int:
+        return self.n_rows * (self.embed_dim + 1) + 1
+
+
+def init_params(rng, cfg: FMConfig) -> dict:
+    k1, k2 = jax.random.split(rng)
+    return {
+        "table": jax.random.normal(k1, (cfg.n_rows, cfg.embed_dim), jnp.float32) * 0.01,
+        "w1": jnp.zeros((cfg.n_rows,), jnp.float32),
+        "bias": jnp.zeros((), jnp.float32),
+    }
+
+
+def param_shardings(cfg: FMConfig, mesh, tp="model") -> dict:
+    return {
+        "table": NamedSharding(mesh, P(tp, None)),  # row-sharded arena
+        "w1": NamedSharding(mesh, P(tp)),
+        "bias": NamedSharding(mesh, P()),
+    }
+
+
+def _row_ids(cfg: FMConfig, ids: jnp.ndarray) -> jnp.ndarray:
+    offsets = jnp.arange(cfg.n_fields, dtype=jnp.int32) * cfg.rows_per_field
+    return ids + offsets[None, :]
+
+
+def forward(params, cfg: FMConfig, batch: dict) -> jnp.ndarray:
+    """batch: ids (B, F) int32 per-field categorical IDs; optional rho row
+    remap (n_rows,) from the sameAs engine.  Returns logits (B,)."""
+    rows = _row_ids(cfg, batch["ids"])
+    rho = batch.get("rho")
+    if rho is not None:
+        rows = rho[rows]  # ID unification via the representative map
+    emb = jnp.take(params["table"], rows, axis=0)  # (B, F, K)
+    if cfg.use_pallas:
+        second = kops.fm_interact(emb)
+    else:
+        s = emb.sum(axis=1)
+        second = 0.5 * ((s * s) - (emb * emb).sum(axis=1)).sum(axis=-1)
+    first = jnp.take(params["w1"], rows, axis=0).sum(axis=1)
+    return params["bias"] + first + second
+
+
+def loss_fn(params, cfg: FMConfig, batch: dict):
+    logits = forward(params, cfg, batch).astype(jnp.float32)
+    y = batch["labels"].astype(jnp.float32)
+    return jnp.mean(
+        jnp.maximum(logits, 0) - logits * y + jnp.log1p(jnp.exp(-jnp.abs(logits)))
+    )
+
+
+def serve_step(params, cfg: FMConfig, batch: dict) -> jnp.ndarray:
+    return jax.nn.sigmoid(forward(params, cfg, batch))
+
+
+def retrieval_scores(params, cfg: FMConfig, user_ids: jnp.ndarray, cand_rows: jnp.ndarray):
+    """Score one user's field-bag embedding against N candidate rows:
+    batched dot, not a loop (the ``retrieval_cand`` shape)."""
+    rows = _row_ids(cfg, user_ids)  # (1, F)
+    q = jnp.take(params["table"], rows[0], axis=0).sum(axis=0)  # (K,)
+    cand = jnp.take(params["table"], cand_rows, axis=0)  # (N, K)
+    return cand @ q + jnp.take(params["w1"], cand_rows, axis=0)

@@ -1,0 +1,360 @@
+"""Decoder-only LM (dense or MoE) with scan-over-layers + remat.
+
+Covers the five assigned LM architectures: GQA (+ optional QKV bias), RoPE,
+SwiGLU dense FFN or DeepSeek/Qwen-style MoE (optional shared experts),
+tied embeddings.  Forward paths:
+
+  * ``loss_fn``     — training loss over (tokens, labels),
+  * ``prefill``     — full-sequence forward building a KV cache,
+  * ``decode_step`` — one new token against a static-size KV cache.
+
+Sharding: ``param_shardings`` / ``act_constraint`` produce NamedShardings for
+the production mesh: batch over (pod, data); heads / ffn / experts / vocab
+over model (DESIGN.md §6).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from .layers import DTYPE, apply_rope, gqa_attention, rms_norm, rope_angles, swiglu
+from .moe import moe_ffn
+
+
+@dataclasses.dataclass(frozen=True)
+class LMConfig:
+    name: str
+    n_layers: int
+    d_model: int
+    n_heads: int
+    n_kv: int
+    d_head: int
+    d_ff: int
+    vocab: int
+    qkv_bias: bool = False
+    rope_theta: float = 1e6
+    # MoE (0 experts = dense)
+    n_experts: int = 0
+    top_k: int = 0
+    n_shared: int = 0
+    d_expert: int = 0
+    capacity_factor: float = 1.25
+    attn_chunk: int = 1024
+    attn_impl: str = "xla_chunked"  # "flash" = Pallas kernel (TPU serving)
+    remat: bool = True
+    # scan layers in groups of `remat_group` with one checkpoint per group:
+    # the saved residual stack shrinks by the group factor, backward
+    # recomputes the group (sqrt-L style memory/compute trade)
+    remat_group: int = 1
+    # MoE dispatch sharding (set by the launcher; defaults run un-meshed)
+    n_token_shards: int = 1
+    dp_axes: tuple = ()
+    ep_axis: str | None = None
+    # FSDP: additionally shard params over the data axes (needed when
+    # params/TP > HBM, e.g. 235B bf16 at TP16 = 29 GiB/chip); GSPMD
+    # all-gathers each layer's weights inside the scan step
+    fsdp: bool = False
+
+    @property
+    def is_moe(self) -> bool:
+        return self.n_experts > 0
+
+    def param_count(self) -> int:
+        d, l = self.d_model, self.n_layers
+        attn = d * self.n_heads * self.d_head + 2 * d * self.n_kv * self.d_head
+        attn += self.n_heads * self.d_head * d
+        if self.is_moe:
+            ffn = 3 * d * self.d_expert * (self.n_experts + self.n_shared)
+            ffn += d * self.n_experts  # router
+        else:
+            ffn = 3 * d * self.d_ff
+        return l * (attn + ffn + 2 * d) + self.vocab * d + d
+
+    def active_param_count(self) -> int:
+        if not self.is_moe:
+            return self.param_count()
+        d, l = self.d_model, self.n_layers
+        attn = d * self.n_heads * self.d_head + 2 * d * self.n_kv * self.d_head
+        attn += self.n_heads * self.d_head * d
+        ffn = 3 * d * self.d_expert * (self.top_k + self.n_shared) + d * self.n_experts
+        return l * (attn + ffn + 2 * d) + self.vocab * d + d
+
+
+# ---------------------------------------------------------------------------
+# parameters
+# ---------------------------------------------------------------------------
+
+def init_params(rng, cfg: LMConfig) -> dict:
+    k_embed, k_layers = jax.random.split(rng)
+
+    def norm(key, shape, fan_in):
+        return (jax.random.normal(key, shape, jnp.float32) * (fan_in**-0.5)).astype(DTYPE)
+
+    d, l = cfg.d_model, cfg.n_layers
+    hq, hkv = cfg.n_heads * cfg.d_head, cfg.n_kv * cfg.d_head
+    ks = jax.random.split(k_layers, 12)
+    layer = {
+        "attn_norm": jnp.ones((l, d), jnp.float32),
+        "wq": norm(ks[0], (l, d, hq), d),
+        "wk": norm(ks[1], (l, d, hkv), d),
+        "wv": norm(ks[2], (l, d, hkv), d),
+        "wo": norm(ks[3], (l, hq, d), hq),
+        "ffn_norm": jnp.ones((l, d), jnp.float32),
+    }
+    if cfg.qkv_bias:
+        layer["bq"] = jnp.zeros((l, hq), DTYPE)
+        layer["bk"] = jnp.zeros((l, hkv), DTYPE)
+        layer["bv"] = jnp.zeros((l, hkv), DTYPE)
+    if cfg.is_moe:
+        fe = cfg.d_expert
+        layer["router"] = jnp.zeros((l, d, cfg.n_experts), jnp.float32)
+        layer["e_gate"] = norm(ks[4], (l, cfg.n_experts, d, fe), d)
+        layer["e_in"] = norm(ks[5], (l, cfg.n_experts, d, fe), d)
+        layer["e_out"] = norm(ks[6], (l, cfg.n_experts, fe, d), fe)
+        if cfg.n_shared:
+            fs = fe * cfg.n_shared
+            layer["s_gate"] = norm(ks[7], (l, d, fs), d)
+            layer["s_in"] = norm(ks[8], (l, d, fs), d)
+            layer["s_out"] = norm(ks[9], (l, fs, d), fs)
+    else:
+        layer["w_gate"] = norm(ks[4], (l, d, cfg.d_ff), d)
+        layer["w_in"] = norm(ks[5], (l, d, cfg.d_ff), d)
+        layer["w_out"] = norm(ks[6], (l, cfg.d_ff, d), cfg.d_ff)
+    return {
+        "embed": norm(k_embed, (cfg.vocab, d), d),
+        "final_norm": jnp.ones((d,), jnp.float32),
+        "layers": layer,
+    }
+
+
+def param_shardings(cfg: LMConfig, mesh, dp=("pod", "data"), tp="model") -> dict:
+    """NamedSharding pytree matching ``init_params`` (ZeRO-1 handled by the
+    optimizer, which further shards its states over dp).  With ``cfg.fsdp``
+    the big per-layer tensors are additionally sharded over dp on a free
+    dimension (weights are all-gathered per scan step)."""
+    dp = tuple(a for a in dp if a in mesh.axis_names)
+
+    def ns(*spec):
+        return NamedSharding(mesh, P(*spec))
+
+    layer = {
+        "attn_norm": ns(None, None),
+        "wq": ns(None, None, tp),
+        "wk": ns(None, None, tp),
+        "wv": ns(None, None, tp),
+        "wo": ns(None, tp, None),
+        "ffn_norm": ns(None, None),
+    }
+    if cfg.qkv_bias:
+        layer["bq"] = ns(None, tp)
+        layer["bk"] = ns(None, tp)
+        layer["bv"] = ns(None, tp)
+    if cfg.is_moe:
+        layer["router"] = ns(None, None, None)
+        layer["e_gate"] = ns(None, tp, None, None)
+        layer["e_in"] = ns(None, tp, None, None)
+        layer["e_out"] = ns(None, tp, None, None)
+        if cfg.n_shared:
+            layer["s_gate"] = ns(None, None, tp)
+            layer["s_in"] = ns(None, None, tp)
+            layer["s_out"] = ns(None, tp, None)
+    else:
+        layer["w_gate"] = ns(None, None, tp)
+        layer["w_in"] = ns(None, None, tp)
+        layer["w_out"] = ns(None, tp, None)
+    out = {
+        "embed": ns(tp, None),  # vocab-parallel
+        "final_norm": ns(None),
+        "layers": layer,
+    }
+    if cfg.fsdp and dp:
+        from repro.optim.adamw import _zero1_sharding  # same free-dim logic
+
+        shapes = jax.eval_shape(lambda: init_params(jax.random.PRNGKey(0), cfg))
+        out = jax.tree.map(
+            lambda s, sh: _zero1_sharding(s, sh.shape, mesh, dp), out, shapes
+        )
+    return out
+
+
+# ---------------------------------------------------------------------------
+# forward
+# ---------------------------------------------------------------------------
+
+def _layer(cfg: LMConfig, x, lp, cos, sin, q_offset, k_cache=None, v_cache=None):
+    """One decoder block.  If k_cache/v_cache given (B,T,KV,Dh), the new K/V
+    are written into the cache at ``q_offset`` first and attention runs over
+    the whole (masked) cache; returns (x', aux, (k_out, v_out)) where k_out is
+    the updated cache (or the fresh K/V when no cache)."""
+    b, s, d = x.shape
+    h = rms_norm(x, lp["attn_norm"])
+    q = jnp.einsum("bsd,dh->bsh", h, lp["wq"].astype(h.dtype))
+    k = jnp.einsum("bsd,dh->bsh", h, lp["wk"].astype(h.dtype))
+    v = jnp.einsum("bsd,dh->bsh", h, lp["wv"].astype(h.dtype))
+    if cfg.qkv_bias:
+        q = q + lp["bq"].astype(h.dtype)
+        k = k + lp["bk"].astype(h.dtype)
+        v = v + lp["bv"].astype(h.dtype)
+    q = q.reshape(b, s, cfg.n_heads, cfg.d_head)
+    k = k.reshape(b, s, cfg.n_kv, cfg.d_head)
+    v = v.reshape(b, s, cfg.n_kv, cfg.d_head)
+    q = apply_rope(q, cos, sin)
+    k = apply_rope(k, cos, sin)
+    if k_cache is not None:
+        q_off = jnp.asarray(q_offset)
+        if q_off.ndim >= 1:  # per-slot cache positions (continuous batching)
+            pos = q_off.reshape(b)
+            upd = jax.vmap(
+                lambda c, u, p: jax.lax.dynamic_update_slice(c, u, (p, 0, 0))
+            )
+            k_cache = upd(k_cache, k.astype(k_cache.dtype), pos)
+            v_cache = upd(v_cache, v.astype(v_cache.dtype), pos)
+        else:
+            k_cache = jax.lax.dynamic_update_slice(
+                k_cache, k.astype(k_cache.dtype), (0, q_offset, 0, 0)
+            )
+            v_cache = jax.lax.dynamic_update_slice(
+                v_cache, v.astype(v_cache.dtype), (0, q_offset, 0, 0)
+            )
+        k, v = k_cache.astype(k.dtype), v_cache.astype(v.dtype)
+        k_new, v_new = k_cache, v_cache
+    else:
+        k_new, v_new = k, v
+    attn = gqa_attention(
+        q, k, v, causal=True, q_offset=q_offset, chunk=cfg.attn_chunk,
+        impl=cfg.attn_impl,
+    )
+    x = x + jnp.einsum("bsh,hd->bsd", attn.reshape(b, s, -1), lp["wo"].astype(x.dtype))
+
+    h = rms_norm(x, lp["ffn_norm"])
+    aux = jnp.zeros((), jnp.float32)
+    if cfg.is_moe:
+        out, aux = moe_ffn(
+            h, lp["router"], lp["e_gate"], lp["e_in"], lp["e_out"],
+            cfg.top_k, cfg.capacity_factor,
+            n_token_shards=cfg.n_token_shards,
+            dp_axes=cfg.dp_axes, ep_axis=cfg.ep_axis,
+        )
+        if cfg.n_shared:
+            out = out + swiglu(h, lp["s_gate"], lp["s_in"], lp["s_out"])
+    else:
+        out = swiglu(h, lp["w_gate"], lp["w_in"], lp["w_out"])
+    return x + out, aux, (k_new, v_new)
+
+
+def forward(params, cfg: LMConfig, tokens: jnp.ndarray, dp_sharding=None):
+    """tokens (B, S) -> hidden (B, S, D), aux loss sum."""
+    b, s = tokens.shape
+    x = params["embed"].astype(DTYPE)[tokens]
+    if dp_sharding is not None:
+        x = jax.lax.with_sharding_constraint(x, dp_sharding)
+    cos, sin = rope_angles(jnp.arange(s), cfg.d_head, cfg.rope_theta)
+
+    def body(x, lp):
+        out, aux, _ = _layer(cfg, x, lp, cos, sin, q_offset=0)
+        if dp_sharding is not None:
+            out = jax.lax.with_sharding_constraint(out, dp_sharding)
+        return out, aux
+
+    g = cfg.remat_group
+    if g > 1 and cfg.n_layers % g == 0:
+        def group(x, lps):
+            x, auxs = jax.lax.scan(body, x, lps)
+            return x, auxs.sum()
+
+        if cfg.remat:
+            group = jax.checkpoint(group)
+        stacked = jax.tree.map(
+            lambda a: a.reshape(cfg.n_layers // g, g, *a.shape[1:]),
+            params["layers"],
+        )
+        x, auxs = jax.lax.scan(group, x, stacked)
+    else:
+        if cfg.remat:
+            body = jax.checkpoint(body)
+        x, auxs = jax.lax.scan(body, x, params["layers"])
+    x = rms_norm(x, params["final_norm"])
+    return x, auxs.sum()
+
+
+def logits_of(params, hidden):
+    return jnp.einsum("bsd,vd->bsv", hidden, params["embed"].astype(hidden.dtype))
+
+
+def loss_fn(params, cfg: LMConfig, tokens, labels, dp_sharding=None,
+            logits_sharding=None):
+    hidden, aux = forward(params, cfg, tokens, dp_sharding)
+    logits = logits_of(params, hidden).astype(jnp.float32)
+    if logits_sharding is not None:
+        # vocab-parallel CE layout: (batch->dp, seq gathered, vocab->model);
+        # without it GSPMD keeps seq sharded and replicates the vocab axis,
+        # materialising (B,S,V) iota/onehot buffers (2.3 GiB each on 235B)
+        logits = jax.lax.with_sharding_constraint(logits, logits_sharding)
+    # Vocab-parallel-safe cross entropy: every reduction below runs over the
+    # (possibly model-sharded) vocab axis, so GSPMD lowers to local partial
+    # reductions + an all-reduce of (B,S) scalars.  A take_along_axis /
+    # log_softmax formulation instead all-gathers the full (B,S,V) f32 logits
+    # (42 GiB/device at 4k x 256 on smollm — found by the dry-run).
+    m = jax.lax.stop_gradient(logits.max(axis=-1, keepdims=True))
+    lse = jnp.log(jnp.exp(logits - m).sum(axis=-1)) + m[..., 0]
+    onehot = (labels[..., None] == jnp.arange(cfg.vocab)[None, None, :])
+    label_logit = jnp.where(onehot, logits, 0.0).sum(axis=-1)
+    nll = lse - label_logit
+    return nll.mean() + 0.01 * aux
+
+
+# ---------------------------------------------------------------------------
+# serving
+# ---------------------------------------------------------------------------
+
+def init_cache(cfg: LMConfig, batch: int, max_len: int) -> dict:
+    shape = (cfg.n_layers, batch, max_len, cfg.n_kv, cfg.d_head)
+    return {"k": jnp.zeros(shape, DTYPE), "v": jnp.zeros(shape, DTYPE)}
+
+
+def prefill(params, cfg: LMConfig, tokens: jnp.ndarray, dp_sharding=None):
+    """Full forward that also returns the per-layer KV cache (B,S,..)."""
+    b, s = tokens.shape
+    x = params["embed"].astype(DTYPE)[tokens]
+    if dp_sharding is not None:
+        x = jax.lax.with_sharding_constraint(x, dp_sharding)
+    cos, sin = rope_angles(jnp.arange(s), cfg.d_head, cfg.rope_theta)
+
+    def body(x, lp):
+        out, _, (k, v) = _layer(cfg, x, lp, cos, sin, q_offset=0)
+        return out, (k, v)
+
+    if cfg.remat:
+        body = jax.checkpoint(body)
+    x, (ks, vs) = jax.lax.scan(body, x, params["layers"])
+    hidden = rms_norm(x, params["final_norm"])
+    logits = logits_of(params, hidden[:, -1:, :])
+    return logits, {"k": ks, "v": vs}
+
+
+def decode_step(params, cfg: LMConfig, cache: dict, token: jnp.ndarray, pos):
+    """One decode step: token (B,), pos scalar int32 (current length).
+
+    The cache has static length T; entries at >= pos are masked by RoPE-side
+    causality (q_offset = pos).  Returns (logits (B,V), new cache).
+    """
+    b = token.shape[0]
+    x = params["embed"].astype(DTYPE)[token][:, None, :]  # (B,1,D)
+    cos, sin = rope_angles(jnp.asarray(pos)[None], cfg.d_head, cfg.rope_theta)
+
+    def body(x, scanned):
+        lp, kc, vc = scanned
+        out, _, (kc, vc) = _layer(
+            cfg, x, lp, cos, sin, q_offset=pos, k_cache=kc, v_cache=vc
+        )
+        return out, (kc, vc)
+
+    x, (ks, vs) = jax.lax.scan(body, x, (params["layers"], cache["k"], cache["v"]))
+    hidden = rms_norm(x, params["final_norm"])
+    logits = logits_of(params, hidden)[:, 0, :]
+    return logits, {"k": ks, "v": vs}

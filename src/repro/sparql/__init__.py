@@ -1,0 +1,4 @@
+from .algebra import Query
+from .executor import evaluate, evaluate_naive
+
+__all__ = ["Query", "evaluate", "evaluate_naive"]

@@ -1,0 +1,3 @@
+from .loop import TrainConfig, Trainer
+
+__all__ = ["TrainConfig", "Trainer"]

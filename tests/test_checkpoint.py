@@ -1,0 +1,86 @@
+"""Checkpoint layer: atomicity, retention, async writer, corrupted-tmp
+recovery, structure mismatch detection."""
+
+import os
+import threading
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.ckpt import (
+    CheckpointManager,
+    latest_step,
+    restore_checkpoint,
+    save_checkpoint,
+)
+
+
+def tree(seed=0):
+    k = jax.random.PRNGKey(seed)
+    return {
+        "w": jax.random.normal(k, (8, 16), jnp.float32),
+        "b": jnp.arange(16, dtype=jnp.bfloat16),
+        "nested": {"step": jnp.int32(7)},
+    }
+
+
+def test_roundtrip(tmp_path):
+    t = tree()
+    save_checkpoint(str(tmp_path), 3, t, aux={"next_step": 3})
+    out, aux, step = restore_checkpoint(str(tmp_path), t)
+    assert step == 3 and aux["next_step"] == 3
+    jax.tree.map(lambda a, b: np.testing.assert_array_equal(np.asarray(a), np.asarray(b)), t, out)
+    assert out["b"].dtype == jnp.bfloat16
+
+
+def test_latest_and_retention(tmp_path):
+    mgr = CheckpointManager(str(tmp_path), keep=2)
+    t = tree()
+    for s in (1, 5, 9):
+        mgr.save(s, t)
+    assert latest_step(str(tmp_path)) == 9
+    kept = sorted(n for n in os.listdir(tmp_path) if n.startswith("step_"))
+    assert len(kept) == 2  # keep=2
+
+
+def test_crashed_tmp_dir_is_ignored(tmp_path):
+    t = tree()
+    save_checkpoint(str(tmp_path), 2, t)
+    # a writer that died mid-flight leaves a tmp dir — must not be visible
+    os.makedirs(tmp_path / "step_000000007.tmp-9999")
+    assert latest_step(str(tmp_path)) == 2
+    out, _, step = restore_checkpoint(str(tmp_path), t)
+    assert step == 2
+
+
+def test_structure_mismatch_raises(tmp_path):
+    save_checkpoint(str(tmp_path), 1, tree())
+    wrong = {"other": jnp.zeros(3)}
+    with pytest.raises(ValueError, match="structure mismatch"):
+        restore_checkpoint(str(tmp_path), wrong)
+
+
+def test_async_writer(tmp_path):
+    mgr = CheckpointManager(str(tmp_path), keep=3, async_save=True)
+    t = tree()
+    for s in range(4):
+        mgr.save(s, t, aux={"next_step": s})
+    mgr.wait()
+    assert latest_step(str(tmp_path)) == 3
+    out, aux, _ = restore_checkpoint(str(tmp_path), t)
+    assert aux["next_step"] == 3
+    mgr.close()
+
+
+def test_async_snapshot_isolation(tmp_path):
+    """The async save must snapshot values at call time, not write time."""
+    mgr = CheckpointManager(str(tmp_path), keep=3, async_save=True)
+    v = {"x": jnp.zeros(4)}
+    mgr.save(0, v)
+    v["x"] = v["x"] + 100.0  # donated/updated after the call
+    mgr.wait()
+    out, _, _ = restore_checkpoint(str(tmp_path), v)
+    np.testing.assert_array_equal(np.asarray(out["x"]), np.zeros(4))
+    mgr.close()

@@ -1,0 +1,130 @@
+"""Unit tests for the core substrate: dictionary, packing, arena, union-find."""
+
+import numpy as np
+import pytest
+
+from repro.core import terms
+from repro.core.rules import Program, Rule, parse_program, parse_rule
+from repro.core.terms import Dictionary, SAME_AS, var
+from repro.core.triples import TripleArena, pack, unpack
+from repro.core.uf import (
+    clique_members,
+    clique_sizes,
+    compress_np,
+    merge_pairs_jax,
+    merge_pairs_np,
+)
+
+
+def test_dictionary_roundtrip():
+    d = Dictionary()
+    a = d.intern(":a")
+    b = d.intern(":b")
+    assert d.intern(":a") == a != b
+    assert d.lookup(a) == ":a"
+    assert d.id_of("owl:sameAs") == SAME_AS
+    assert ":a" in d and ":zzz" not in d
+
+
+def test_pack_unpack_roundtrip():
+    rng = np.random.default_rng(0)
+    spo = rng.integers(0, terms.MAX_ID, size=(1000, 3)).astype(np.int32)
+    assert (unpack(pack(spo)) == spo).all()
+    # packing is order-preserving lexicographically
+    keys = pack(spo)
+    order = np.argsort(keys)
+    rows = spo[order]
+    as_tuples = [tuple(r) for r in rows]
+    assert as_tuples == sorted(as_tuples)
+
+
+def test_arena_add_dedup_and_mark():
+    a = TripleArena(capacity=2)
+    added = a.add_batch(np.array([[1, 2, 3], [1, 2, 3], [4, 5, 6]], np.int32))
+    assert added.shape[0] == 2
+    assert a.total == 2 and a.unmarked == 2
+    # re-adding is a no-op
+    assert a.add_batch(np.array([[4, 5, 6]], np.int32)).shape[0] == 0
+    # marking hides from matching but keeps the row (paper: mark, don't delete)
+    a.mark_rows(np.array([0]))
+    assert a.total == 2 and a.unmarked == 1
+    assert not a.contains(np.array([[1, 2, 3]]))[0]
+    assert a.contains(np.array([[4, 5, 6]]))[0]
+    # growth across capacity boundary
+    big = np.stack([np.arange(7, 107), np.full(100, 2), np.arange(7, 107)], axis=1)
+    assert a.add_batch(big.astype(np.int32)).shape[0] == 100
+    assert a.unmarked == 101
+
+
+def test_rewrite_sweep_marks_and_returns():
+    a = TripleArena()
+    a.add_batch(np.array([[5, 2, 5], [7, 2, 8]], np.int32))
+    rep = np.arange(10, dtype=np.int32)
+    rep[7] = 3  # 7 merged into 3
+    rw = a.rewrite_sweep(rep)
+    assert rw.tolist() == [[3, 2, 8]]
+    assert a.unmarked == 1  # <5,2,5> untouched, <7,2,8> marked
+    assert a.total == 2
+
+
+def test_union_find_min_hooking_deterministic():
+    rep = np.arange(10, dtype=np.int32)
+    pairs = np.array([[3, 7], [7, 9], [2, 9], [5, 4]], np.int32)
+    rep1, n1 = merge_pairs_np(rep.copy(), pairs)
+    # same pairs in any order give the same result
+    rep2, n2 = merge_pairs_np(rep.copy(), pairs[::-1])
+    assert (rep1 == rep2).all() and n1 == n2 == 4
+    # clique {2,3,7,9} -> rep 2; {4,5} -> 4
+    assert rep1[3] == rep1[7] == rep1[9] == rep1[2] == 2
+    assert rep1[5] == rep1[4] == 4
+    sizes = clique_sizes(rep1)
+    assert sizes[2] == 4 and sizes[4] == 2 and sizes[0] == 1
+    mem = clique_members(rep1)
+    assert mem[2].tolist() == [2, 3, 7, 9]
+
+
+def test_union_find_chain_and_cycle():
+    rep = np.arange(6, dtype=np.int32)
+    # chain 0-1, 1-2, 2-3, 3-0 (cycle) must not loop forever
+    pairs = np.array([[0, 1], [1, 2], [2, 3], [3, 0]], np.int32)
+    rep, n = merge_pairs_np(rep, pairs)
+    assert (rep[:4] == 0).all() and n == 3
+
+
+def test_union_find_jax_matches_np():
+    rng = np.random.default_rng(1)
+    n = 200
+    for trial in range(5):
+        pairs = rng.integers(0, n, size=(50, 2)).astype(np.int32)
+        rep_np, _ = merge_pairs_np(np.arange(n, dtype=np.int32), pairs)
+        valid = np.ones(pairs.shape[0], dtype=bool)
+        # pad with garbage to exercise the mask
+        pad = rng.integers(0, n, size=(13, 2)).astype(np.int32)
+        pairs_j = np.concatenate([pairs, pad])
+        valid_j = np.concatenate([valid, np.zeros(13, bool)])
+        rep_j = np.asarray(
+            merge_pairs_jax(
+                np.arange(n, dtype=np.int32), pairs_j.astype(np.int32), valid_j
+            )
+        )
+        assert (compress_np(rep_j) == rep_np).all(), trial
+
+
+def test_rule_parse_and_rewrite():
+    d = Dictionary()
+    r = parse_rule("(?x, owl:sameAs, :USA) <- (:Obama, :presidentOf, ?x)", d)
+    assert r.head[0] == var(1) and r.head[1] == SAME_AS
+    rep = np.arange(len(d), dtype=np.int32)
+    rep[d.id_of(":USA")] = d.id_of(":Obama")
+    rr = r.rewrite(rep)
+    assert rr.head[2] == d.id_of(":Obama")
+    assert rr.body == r.body  # body had no :USA
+    prog, changed = Program([r]).rewrite(rep)
+    assert changed == [0]
+    prog2, changed2 = prog.rewrite(rep)
+    assert changed2 == []
+
+
+def test_unsafe_rule_rejected():
+    with pytest.raises(ValueError):
+        Rule((var(1), SAME_AS, var(2)), ((var(1), 5, 6),))

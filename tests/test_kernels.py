@@ -1,0 +1,169 @@
+"""Per-kernel allclose sweeps against the pure-jnp oracles (interpret mode)."""
+
+import numpy as np
+import pytest
+
+import jax.numpy as jnp
+
+from repro.kernels import ops, ref
+
+RNG = np.random.default_rng(42)
+
+
+@pytest.mark.parametrize("n,v", [(7, 13), (100, 100), (513, 1000), (2000, 257)])
+@pytest.mark.parametrize("block,tile", [(128, 128), (512, 512), (64, 256)])
+def test_pointer_jump_sweep(n, v, block, tile):
+    idx = jnp.asarray(RNG.integers(0, v, n), jnp.int32)
+    table = jnp.asarray(RNG.integers(0, 1 << 20, v), jnp.int32)
+    out = ops.pointer_jump(idx, table, block=block, tile=tile)
+    np.testing.assert_array_equal(out, ref.pointer_jump_ref(idx, table))
+
+
+@pytest.mark.parametrize("n,v", [(5, 9), (300, 512), (1025, 700)])
+def test_rewrite_triples_sweep(n, v):
+    spo = jnp.asarray(RNG.integers(0, v, (n, 3)), jnp.int32)
+    rho = jnp.asarray(np.arange(v), jnp.int32)
+    # merge ~30% of resources
+    merges = RNG.integers(0, v, v // 3)
+    rho = rho.at[merges].set(jnp.asarray(RNG.integers(0, v, v // 3), jnp.int32))
+    out, changed = ops.rewrite_triples(spo, rho)
+    ref_out, ref_changed = ref.rewrite_triples_ref(spo, rho)
+    np.testing.assert_array_equal(out, ref_out)
+    np.testing.assert_array_equal(changed, ref_changed)
+
+
+@pytest.mark.parametrize("nq,nk", [(10, 64), (257, 1000), (1000, 3)])
+@pytest.mark.parametrize("big", [False, True])
+def test_search_bounds_sweep(nq, nk, big):
+    hi_bits = 62 if big else 20  # exercise >32-bit keys (the packed-key case)
+    keys = np.sort(RNG.integers(0, 1 << hi_bits, nk).astype(np.int64))
+    queries = np.concatenate(
+        [RNG.choice(keys, nq // 2), RNG.integers(0, 1 << hi_bits, nq - nq // 2)]
+    ).astype(np.int64)
+    lo, hi = ops.search_bounds(queries, keys)
+    rlo, rhi = ref.search_bounds_ref(queries, keys)
+    np.testing.assert_array_equal(lo, rlo)
+    np.testing.assert_array_equal(hi, rhi)
+
+
+@pytest.mark.parametrize("b,f,v,k", [(4, 3, 50, 8), (130, 39, 1000, 10), (64, 26, 513, 16)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_embedding_bag_sweep(b, f, v, k, dtype):
+    ids = jnp.asarray(RNG.integers(0, v, (b, f)), jnp.int32)
+    table = jnp.asarray(RNG.normal(size=(v, k)), dtype)
+    out = ops.embedding_bag(ids, table)
+    expected = ref.embedding_bag_ref(ids, table)
+    rtol = 1e-6 if dtype == jnp.float32 else 5e-2
+    np.testing.assert_allclose(
+        np.asarray(out, np.float32), np.asarray(expected, np.float32), rtol=rtol, atol=1e-3
+    )
+
+
+@pytest.mark.parametrize("b,f,k", [(3, 5, 4), (300, 39, 10), (1024, 26, 16)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_fm_interact_sweep(b, f, k, dtype):
+    x = jnp.asarray(RNG.normal(size=(b, f, k)), dtype)
+    out = ops.fm_interact(x)
+    expected = ref.fm_interact_ref(x)
+    np.testing.assert_allclose(
+        np.asarray(out, np.float32),
+        np.asarray(expected, np.float32),
+        rtol=1e-5 if dtype == jnp.float32 else 5e-2,
+        atol=1e-2,
+    )
+
+
+@pytest.mark.parametrize("n,s,k", [(10, 4, 8), (1000, 100, 16), (513, 700, 4)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_segment_sum_sweep(n, s, k, dtype):
+    x = jnp.asarray(RNG.normal(size=(n, k)), dtype)
+    seg = jnp.asarray(RNG.integers(0, s, n), jnp.int32)
+    out = ops.segment_sum(x, seg, s)
+    # oracle in f32: the kernel accumulates in f32 (preferred_element_type),
+    # which is *more* precise than a bf16 jnp chain — compare to ground truth
+    expected = ref.segment_sum_ref(x.astype(jnp.float32), seg, s)
+    np.testing.assert_allclose(
+        np.asarray(out, np.float32),
+        np.asarray(expected, np.float32),
+        rtol=1e-5 if dtype == jnp.float32 else 1e-1,
+        atol=1e-2 if dtype == jnp.float32 else 1e-1,
+    )
+
+
+def test_pointer_jump_converges_like_uf():
+    """Kernel-driven pointer doubling reaches the union-find fixpoint."""
+    from repro.core.uf import compress_np
+
+    v = 300
+    rep = np.arange(v, dtype=np.int32)
+    for a, b in RNG.integers(0, v, (40, 2)):
+        ra, rb = rep[a], rep[b]
+        if ra != rb:
+            rep[max(ra, rb)] = min(ra, rb)
+    cur = jnp.asarray(rep)
+    for _ in range(12):
+        cur = ops.pointer_jump(cur, cur)
+    np.testing.assert_array_equal(np.asarray(cur), compress_np(rep))
+
+
+# ---------------------------------------------------------------------------
+# flash attention (fwd) vs the naive oracle
+# ---------------------------------------------------------------------------
+
+def _attn_inputs(b, s, t, h, kv, d, dtype):
+    q = jnp.asarray(RNG.normal(size=(b, s, h, d)), dtype)
+    k = jnp.asarray(RNG.normal(size=(b, t, kv, d)), dtype)
+    v = jnp.asarray(RNG.normal(size=(b, t, kv, d)), dtype)
+    return q, k, v
+
+
+@pytest.mark.parametrize("s,t,h,kv,d", [
+    (64, 64, 4, 2, 32),     # GQA g=2
+    (48, 48, 3, 3, 16),     # MHA, non-pow2 seq (padding path)
+    (128, 128, 8, 2, 64),   # GQA g=4
+    (17, 33, 2, 1, 8),      # MQA, ragged blocks
+])
+@pytest.mark.parametrize("causal", [True, False])
+def test_flash_attention_sweep(s, t, h, kv, d, causal):
+    from repro.models.layers import naive_attention
+
+    q, k, v = _attn_inputs(2, s, t, h, kv, d, jnp.float32)
+    ref_out = naive_attention(q, k, v, causal=causal)
+    out = ops.flash_attention(q, k, v, causal=causal, block_q=16, block_k=16)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref_out), atol=2e-5)
+
+
+@pytest.mark.parametrize("dtype,atol", [(jnp.float32, 2e-5), (jnp.bfloat16, 2e-2)])
+def test_flash_attention_dtypes(dtype, atol):
+    from repro.models.layers import naive_attention
+
+    q, k, v = _attn_inputs(1, 32, 32, 4, 2, 32, dtype)
+    ref_out = naive_attention(q, k, v, causal=True)
+    out = ops.flash_attention(q, k, v, causal=True, block_q=16, block_k=16)
+    np.testing.assert_allclose(
+        np.asarray(out, np.float32), np.asarray(ref_out, np.float32), atol=atol
+    )
+
+
+def test_flash_attention_decode_offset():
+    """Single-token decode against a prefix cache: q_offset masks the tail."""
+    from repro.models.layers import naive_attention
+
+    t, pos = 64, 37
+    q, k, v = _attn_inputs(2, 1, t, 4, 2, 32, jnp.float32)
+    # oracle: only cache entries < pos+1 are attendable
+    ref_out = naive_attention(q, k[:, : pos + 1], v[:, : pos + 1], causal=True,
+                              q_offset=pos)
+    out = ops.flash_attention(q, k, v, causal=True, q_offset=pos,
+                              block_q=8, block_k=16)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref_out), atol=2e-5)
+
+
+def test_flash_matches_chunked_xla_path():
+    """The Pallas kernel and the XLA chunked path are interchangeable."""
+    from repro.models.layers import gqa_attention
+
+    q, k, v = _attn_inputs(2, 64, 64, 4, 2, 32, jnp.float32)
+    a = gqa_attention(q, k, v, causal=True, chunk=16)
+    b = ops.flash_attention(q, k, v, causal=True, block_q=16, block_k=16)
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=2e-5)

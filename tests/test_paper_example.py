@@ -1,0 +1,97 @@
+"""The paper's running example (§3, §4 Table 1) reproduced exactly."""
+
+import numpy as np
+
+from repro.core.materialise import check_theorem1, expand, materialise
+from repro.core.terms import SAME_AS
+from repro.data.datasets import pex, pex_rule_rewrite
+
+
+def test_pex_rew_final_store():
+    """After REW materialisation of P_ex the unmarked store is exactly the
+    paper's end state: one presidentOf fact + reflexive sameAs facts, with
+    {USA,US,America} and {Obama,USPresident} merged."""
+    facts, prog, dic = pex()
+    rew = materialise(facts, prog, dic.n_resources, mode="REW")
+
+    usa, us, am = (dic.id_of(x) for x in (":USA", ":US", ":America"))
+    ob, up = dic.id_of(":Obama"), dic.id_of(":USPresident")
+    # cliques are correct (representative = min ID, a valid total order)
+    assert rew.rep[usa] == rew.rep[us] == rew.rep[am]
+    assert rew.rep[ob] == rew.rep[up]
+    assert rew.rep[usa] != rew.rep[ob]
+    assert rew.stats.merged_resources == 3  # paper: 3 resources rewritten
+
+    t = {tuple(map(int, r)) for r in rew.triples()}
+    pres = dic.id_of(":presidentOf")
+    r_usa, r_ob = int(rew.rep[usa]), int(rew.rep[ob])
+    expected = {
+        (r_ob, pres, r_usa),
+        (r_ob, SAME_AS, r_ob),
+        (r_usa, SAME_AS, r_usa),
+        (pres, SAME_AS, pres),
+        (SAME_AS, SAME_AS, SAME_AS),
+    }
+    assert t == expected
+
+
+def test_pex_derivation_counts():
+    """Paper §4: REW makes ~6 derivations on P_ex 'instead of more than 60'.
+
+    The exact count depends on the representative-choice path: the paper's
+    trace picks :US (forcing rule rewriting and one R-queue re-derivation,
+    6 total); our min-ID order picks :USA (no rule change, 5 total; the
+    rewrite-forcing variant below makes 7 because both rules are re-run).
+    The claim being reproduced is the order of magnitude: single digits vs
+    the >60 of the axiomatisation.  Reflexive additions (Algorithm 4 lines
+    17-18) are counted separately by our stats.
+    """
+    facts, prog, dic = pex()
+    rew = materialise(facts, prog, dic.n_resources, mode="REW")
+    ax = materialise(facts, prog, dic.n_resources, mode="AX")
+    rule_derivs = rew.stats.derivations - rew.stats.reflexive_added
+    assert rule_derivs == 5  # deterministic for min-ID representatives
+    assert ax.stats.derivations > 60
+    assert ax.stats.derivations > 10 * rew.stats.derivations
+
+    facts, prog, dic = pex_rule_rewrite()
+    rew_rr = materialise(facts, prog, dic.n_resources, mode="REW")
+    assert rew_rr.stats.derivations - rew_rr.stats.reflexive_added == 7
+
+
+def test_pex_theorem1_and_expansion():
+    facts, prog, dic = pex()
+    rew = materialise(facts, prog, dic.n_resources, mode="REW")
+    ax = materialise(facts, prog, dic.n_resources, mode="AX")
+    check_theorem1(rew, ax)
+    # spot-check the expansion contains all 9 sameAs pairs of the USA-clique
+    usa, us, am = (dic.id_of(x) for x in (":USA", ":US", ":America"))
+    exp = expand(rew.triples(), rew.rep)
+    for a in (usa, us, am):
+        for b in (usa, us, am):
+            assert (a, SAME_AS, b) in exp
+
+
+def test_pex_marked_triples_kept():
+    """Mark-don't-delete: the arena retains outdated rows (paper §4)."""
+    facts, prog, dic = pex()
+    rew = materialise(facts, prog, dic.n_resources, mode="REW")
+    assert rew.stats.triples_total > rew.stats.triples_unmarked
+
+
+def test_rule_rewriting_required_for_completeness():
+    """§3: 'rewriting only triples can be insufficient' — when :US is chosen
+    as representative, rule (S) with constant :USA only fires after rule
+    rewriting.  Without it, <USPresident sameAs Obama> would be lost."""
+    facts, prog, dic = pex_rule_rewrite()
+    rew = materialise(facts, prog, dic.n_resources, mode="REW")
+    ax = materialise(facts, prog, dic.n_resources, mode="AX")
+    # the dangerous representative choice actually happened
+    usa, us = dic.id_of(":USA"), dic.id_of(":US")
+    assert rew.rep[usa] == us
+    # rule rewriting fired
+    assert rew.stats.rules_requeued > 0
+    # and completeness held anyway
+    ob, up = dic.id_of(":Obama"), dic.id_of(":USPresident")
+    assert rew.rep[ob] == rew.rep[up]
+    check_theorem1(rew, ax)
