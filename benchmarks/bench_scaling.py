@@ -35,8 +35,9 @@ _SCRIPT = textwrap.dedent(
     t0 = time.time(); materialise(facts, prog, dic.n_resources, mode="REW")
     rew_np_s = time.time() - t0
 
-    mesh = jax.make_mesh((n_dev,), ("data",),
-                         axis_types=(jax.sharding.AxisType.Auto,))
+    from repro.launch.mesh import make_mesh
+
+    mesh = make_mesh((n_dev,), ("data",))
     cap = 1 << 17
     eng = JaxEngine(dic.n_resources, capacity=cap // n_dev, bind_cap=1 << 14,
                     out_cap=1 << 14, rewrite_cap=1 << 14, mesh=mesh)

@@ -30,12 +30,10 @@ def main():
           f"{dic.n_resources} resources")
 
     if args.spmd:
-        import jax
-
         from repro.core.engine_jax import JaxEngine
+        from repro.launch.mesh import make_mesh
 
-        mesh = jax.make_mesh((args.spmd,), ("data",),
-                             axis_types=(jax.sharding.AxisType.Auto,))
+        mesh = make_mesh((args.spmd,), ("data",))
         eng = JaxEngine(dic.n_resources, capacity=(1 << 17) // args.spmd,
                         bind_cap=1 << 14, out_cap=1 << 14, rewrite_cap=1 << 14,
                         mesh=mesh)

@@ -1,0 +1,75 @@
+"""JAX version compatibility shims (policy: docs/incremental.md §compat).
+
+The repo targets the jax that ships in the container (0.4.x today) while
+staying forward-compatible with the 0.5+/0.6+ API renames.  Three surfaces
+moved between those lines:
+
+  * ``jax.sharding.AxisType`` (and the ``axis_types=`` kwarg of
+    ``jax.make_mesh``) only exist on jax >= 0.5 — older meshes are implicitly
+    all-Auto, so omitting the kwarg is semantically identical,
+  * ``jax.shard_map`` (with ``check_vma=``) is the 0.6 name for
+    ``jax.experimental.shard_map.shard_map`` (with ``check_rep=``),
+  * ``Compiled.cost_analysis()`` returns a dict on new jax but a
+    single-element ``list[dict]`` on 0.4.x.
+
+Everything else in the repo must go through these helpers instead of
+feature-sniffing jax inline.
+"""
+
+from __future__ import annotations
+
+import jax
+
+HAS_AXIS_TYPE = hasattr(jax.sharding, "AxisType")
+HAS_TOPLEVEL_SHARD_MAP = hasattr(jax, "shard_map")
+
+
+def axis_types_auto(n: int):
+    """``axis_types=`` value for an n-axis all-Auto mesh; None on old jax
+    (whose meshes are implicitly Auto and reject the kwarg)."""
+    if not HAS_AXIS_TYPE:
+        return None
+    return (jax.sharding.AxisType.Auto,) * n
+
+
+def make_mesh(shape, axes, *, devices=None):
+    """``jax.make_mesh`` with explicit-Auto axis types where supported."""
+    kwargs = {}
+    if devices is not None:
+        kwargs["devices"] = devices
+    axis_types = axis_types_auto(len(axes))
+    if axis_types is not None:
+        kwargs["axis_types"] = axis_types
+    return jax.make_mesh(shape, axes, **kwargs)
+
+
+def shard_map(fn, *, mesh, in_specs, out_specs):
+    """Unchecked shard_map across the 0.4 -> 0.6 API rename.
+
+    Replication/VMA checking is disabled on both paths: the engine's round
+    body mixes replicated and sharded outputs in ways the checker rejects
+    (the all-gather/all_to_all exchanges are hand-verified instead).
+    """
+    if HAS_TOPLEVEL_SHARD_MAP:
+        return jax.shard_map(
+            fn, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+            check_vma=False,
+        )
+    from jax.experimental.shard_map import shard_map as _shard_map
+
+    return _shard_map(
+        fn, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+        check_rep=False,
+    )
+
+
+def xla_cost_analysis(compiled) -> dict:
+    """``Compiled.cost_analysis()`` as a flat dict on every jax version.
+
+    jax 0.4.x returns ``[per_program_dict]``; 0.5+ returns the dict itself.
+    An empty analysis normalises to ``{}``.
+    """
+    ca = compiled.cost_analysis()
+    if isinstance(ca, (list, tuple)):
+        ca = ca[0] if ca else {}
+    return dict(ca) if ca else {}

@@ -45,6 +45,8 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
+from repro.compat import shard_map as compat_shard_map
+
 from .rules import Program, Rule
 from .stats import MatStats
 from .terms import DIFFERENT_FROM, SAME_AS, is_var
@@ -480,9 +482,8 @@ class JaxEngine:
         if self.mesh is None:
             return jax.jit(fn)
         return jax.jit(
-            jax.shard_map(
+            compat_shard_map(
                 fn, mesh=self.mesh, in_specs=in_specs, out_specs=out_specs,
-                check_vma=False,
             )
         )
 
@@ -635,6 +636,46 @@ class JaxEngine:
             stats.rule_applications += int(np.asarray(n_a).sum())
             out.append((heads, valid))
         return out
+
+    def materialise_incremental(
+        self, facts, program: Program, updates, max_rounds: int = 10_000
+    ):
+        """Base REW materialisation on the accelerator, then maintain the
+        result through an update stream without re-running from scratch.
+
+        ``updates`` is an iterable of ``("add" | "delete", delta)`` pairs
+        (each delta an (n, 3) int array of explicit triples, original IDs).
+        The base fixpoint — the expensive part — runs on this engine; the
+        maintenance passes run on the host subsystem
+        (:mod:`repro.core.incremental`), which shares the rho/arena/rule
+        machinery and is oracle-equal to a from-scratch run.  Returns
+        ``(spo, rep, stats)`` like :meth:`materialise`.
+        """
+        from .incremental import IncrementalState, add_facts, delete_facts
+        from .triples import TripleArena, dedup_rows
+
+        spo, rep, stats = self.materialise(facts, program, max_rounds)
+        arena = TripleArena()
+        arena.add_batch(spo)
+        p_cur, _ = program.rewrite(rep)
+        state = IncrementalState(
+            arena=arena,
+            rep=rep.astype(np.int32),
+            program=p_cur,
+            base_program=program,
+            explicit=dedup_rows(facts),
+            n_resources=self.n_resources,
+            stats=stats,
+        )
+        for op, delta in updates:
+            if op == "add":
+                add_facts(state, delta, max_rounds)
+            elif op in ("delete", "del"):
+                delete_facts(state, delta, max_rounds)
+            else:
+                raise ValueError(f"unknown update op {op!r}")
+        state.result()  # refresh triple/memory counters on stats
+        return state.triples(), state.rep, state.stats
 
     def materialise(self, facts, program: Program, max_rounds: int = 10_000):
         """REW materialisation with automatic capacity growth."""

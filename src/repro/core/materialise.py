@@ -25,7 +25,7 @@ from .rules import Program
 from .seminaive import eval_rule_delta, eval_rule_full
 from .stats import MatStats
 from .terms import DIFFERENT_FROM, SAME_AS
-from .triples import TripleArena, pack
+from .triples import TripleArena, dedup_rows as _dedup, pack
 from .uf import clique_members, compress_np, merge_pairs_np
 
 
@@ -50,14 +50,6 @@ class MatResult:
 
         sizes = clique_sizes(self.rep)
         return sizes[self.rep[ids]]
-
-
-def _dedup(spo: np.ndarray) -> np.ndarray:
-    if spo.shape[0] == 0:
-        return spo
-    keys = pack(spo)
-    _, idx = np.unique(keys, return_index=True)
-    return spo[np.sort(idx)]
 
 
 def _check_contradictions(cands: np.ndarray) -> None:
@@ -120,25 +112,34 @@ def materialise_ax(
 # REW mode (the paper's algorithm, bulk-synchronous)
 # ---------------------------------------------------------------------------
 
-def materialise_rew(
-    facts: np.ndarray,
+def rew_rounds(
+    arena: TripleArena,
+    rep: np.ndarray,
     program: Program,
-    n_resources: int,
+    cands: np.ndarray,
+    stats: MatStats,
     max_rounds: int = 10_000,
-) -> MatResult:
-    t0 = time.perf_counter()
-    stats = MatStats(mode="REW")
-    arena = TripleArena()
-    rep = np.arange(n_resources, dtype=np.int32)
-    p_cur = program
-    r_queue: list = []  # rewritten rules awaiting full re-evaluation
+    r_queue: list | None = None,
+) -> tuple[np.ndarray, Program]:
+    """Run the bulk-synchronous REW loop to fixpoint over ``cands``.
 
-    cands = np.asarray(facts, dtype=np.int32).reshape(-1, 3)
-    stats.triples_explicit = cands.shape[0]
+    The shared driver behind :func:`materialise_rew` (which starts from an
+    empty arena) and :mod:`repro.core.incremental` (which resumes from a
+    populated arena: additions seed ``cands`` with the new triples, deletions
+    seed it with the rederivation candidates after the B/F overdelete pass).
+    Mutates ``arena`` and ``stats`` in place; returns the updated
+    ``(rep, program)``.  ``max_rounds`` bounds this invocation, not the
+    cumulative ``stats.rounds``.
+    """
+    p_cur = program
+    r_queue = list(r_queue) if r_queue else []  # rules awaiting full re-eval
+    cands = np.asarray(cands, dtype=np.int32).reshape(-1, 3)
+    rounds_here = 0
 
     while cands.shape[0] > 0 or r_queue:
         stats.rounds += 1
-        if stats.rounds > max_rounds:
+        rounds_here += 1
+        if rounds_here > max_rounds:
             raise RuntimeError("materialisation did not converge")
 
         # ---- process candidates (Algorithm 4, batched) -------------------
@@ -214,7 +215,24 @@ def materialise_rew(
         if cands.shape[0]:
             cands = cands[~arena.contains(rep[cands].astype(np.int32))]
 
-    rep = compress_np(rep)
+    return compress_np(rep), p_cur
+
+
+def materialise_rew(
+    facts: np.ndarray,
+    program: Program,
+    n_resources: int,
+    max_rounds: int = 10_000,
+) -> MatResult:
+    t0 = time.perf_counter()
+    stats = MatStats(mode="REW")
+    arena = TripleArena()
+    rep = np.arange(n_resources, dtype=np.int32)
+
+    cands = np.asarray(facts, dtype=np.int32).reshape(-1, 3)
+    stats.triples_explicit = cands.shape[0]
+    rep, p_cur = rew_rounds(arena, rep, program, cands, stats, max_rounds)
+
     stats.triples_total = arena.total
     stats.triples_unmarked = arena.unmarked
     stats.memory_bytes = arena.nbytes

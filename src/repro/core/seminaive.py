@@ -154,16 +154,21 @@ def eval_rule_delta(
     n_appl = 0
     body = rule.body
     for i in range(len(body)):
+        # delta-first join order: plans whose delta atom matches nothing die
+        # for free, and surviving plans keep intermediates proportional to
+        # the (small) delta instead of to the store — the incremental win
+        if delta.shape[0] == 0 or not _const_filter(body[i], delta).any():
+            continue
         b = Bindings.empty_universe()
         dead = False
-        for j, atom in enumerate(body):
+        for j in [i, *(j for j in range(len(body)) if j != i)]:
             if j < i:
                 src = t_old
             elif j == i:
                 src = delta
             else:
                 src = t_all
-            b, n_cand = join_atom(b, atom, src)
+            b, n_cand = join_atom(b, body[j], src)
             if j == i:
                 n_appl += n_cand
             if b.nrows == 0:

@@ -23,6 +23,15 @@ def pack(spo: np.ndarray) -> np.ndarray:
     return (s << _SHIFT_S) | (p << _SHIFT_P) | o
 
 
+def dedup_rows(spo: np.ndarray) -> np.ndarray:
+    """Distinct triples of an (n, 3) batch, first occurrence order kept."""
+    spo = np.asarray(spo, dtype=np.int32).reshape(-1, 3)
+    if spo.shape[0] == 0:
+        return spo
+    _, idx = np.unique(pack(spo), return_index=True)
+    return spo[np.sort(idx)]
+
+
 def unpack(keys: np.ndarray) -> np.ndarray:
     mask = (1 << 21) - 1
     s = (keys >> _SHIFT_S) & mask
@@ -84,6 +93,9 @@ class TripleArena:
         """T.add for a batch: dedup within the batch and against valid rows.
 
         Returns the (m,3) array of facts actually added (the new Delta).
+        The membership index is maintained incrementally — a sorted merge of
+        the few new keys instead of a full O(n log n) re-sort, which is what
+        makes small incremental updates cheap against a large store.
         """
         spo = np.asarray(spo, dtype=np.int32).reshape(-1, 3)
         if spo.shape[0] == 0:
@@ -95,16 +107,29 @@ class TripleArena:
         if fresh.shape[0] == 0:
             return fresh
         self._ensure(fresh.shape[0])
-        self.spo[self.n : self.n + fresh.shape[0]] = fresh
-        self.valid[self.n : self.n + fresh.shape[0]] = True
+        rows = np.arange(self.n, self.n + fresh.shape[0])
+        self.spo[rows] = fresh
+        self.valid[rows] = True
         self.n += fresh.shape[0]
-        self._keys = None
+        if self._keys is not None:
+            fk = pack(fresh)
+            order = np.argsort(fk, kind="stable")
+            pos = np.searchsorted(self._keys, fk[order])
+            self._keys = np.insert(self._keys, pos, fk[order])
+            self._rows = np.insert(self._rows, pos, rows[order])
         return fresh
 
     def mark_rows(self, rows: np.ndarray) -> None:
         """T.mark: flip validity (facts stay in the arena, as in the paper)."""
+        rows = np.asarray(rows).reshape(-1)
+        if rows.shape[0] and self._keys is not None:
+            live = rows[self.valid[rows]]
+            if live.shape[0]:
+                keys = np.sort(pack(self.spo[live]))
+                pos = np.searchsorted(self._keys, keys)
+                self._keys = np.delete(self._keys, pos)
+                self._rows = np.delete(self._rows, pos)
         self.valid[rows] = False
-        self._keys = None
 
     def valid_triples(self) -> np.ndarray:
         return self.spo[: self.n][self.valid[: self.n]]

@@ -144,7 +144,9 @@ def run_cell(arch: str, shape_name: str, mesh_kind: str, out_dir: str) -> dict:
         mem["tpu_est_bytes"] = mem["peak_bytes"] - _bf16_dup_bytes(hlo)
         mem["fits_hbm_tpu_est"] = bool(mem["tpu_est_bytes"] <= HW["hbm_bytes"])
 
-        ca = compiled.cost_analysis() or {}
+        from repro.compat import xla_cost_analysis
+
+        ca = xla_cost_analysis(compiled)
         print(
             f"[dryrun] {wl.name}:{mesh_kind} cost_analysis: "
             f"flops={ca.get('flops')} bytes={ca.get('bytes accessed')}"

@@ -19,6 +19,11 @@ multipliers:
 Everything is per-device (the module is the per-device SPMD program).
 Validated against ``cost_analysis()`` on loop-free modules and against an
 unrolled-vs-scanned pair (tests/test_hlo_costs.py).
+
+Both :func:`analyse_hlo` and the XLA baseline accessor
+:func:`xla_cost_analysis` (re-exported from :mod:`repro.compat`) return a
+flat ``dict`` — jax 0.4.x wraps ``Compiled.cost_analysis()`` in a
+single-element list, which the compat shim unwraps.
 """
 
 from __future__ import annotations
@@ -26,6 +31,10 @@ from __future__ import annotations
 import dataclasses
 import re
 from collections import defaultdict
+
+from repro.compat import xla_cost_analysis
+
+__all__ = ["analyse_hlo", "parse_module", "xla_cost_analysis"]
 
 _DTYPE_BYTES = {
     "pred": 1, "s4": 0.5, "u4": 0.5, "s8": 1, "u8": 1,

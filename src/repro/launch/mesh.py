@@ -9,27 +9,34 @@ Axes:
                 once per step,
   * ``data``  — batch / edge / row sharding (ICI),
   * ``model`` — tensor/expert/vocab/embedding-row parallelism (ICI).
+
+``axis_types_auto`` / ``make_mesh`` are re-exported from :mod:`repro.compat`
+so callers that build their own meshes stay portable across the jax 0.4/0.6
+``AxisType`` rename without feature-sniffing jax themselves.
 """
 
 from __future__ import annotations
 
 import jax
 
+from repro.compat import axis_types_auto, make_mesh
 
-def _auto(n):
-    return (jax.sharding.AxisType.Auto,) * n
+__all__ = [
+    "axis_types_auto", "make_mesh", "make_production_mesh",
+    "make_engine_mesh", "data_axes", "model_axis",
+]
 
 
 def make_production_mesh(*, multi_pod: bool = False):
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(shape, axes, axis_types=_auto(len(axes)))
+    return make_mesh(shape, axes)
 
 
 def make_engine_mesh(n_devices: int | None = None, axis: str = "data"):
     """1-D mesh for the SPMD materialisation engine."""
     n = n_devices or len(jax.devices())
-    return jax.make_mesh((n,), (axis,), axis_types=_auto(1))
+    return make_mesh((n,), (axis,))
 
 
 def data_axes(mesh) -> tuple[str, ...]:

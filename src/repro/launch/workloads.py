@@ -19,6 +19,7 @@ import numpy as np
 from jax.sharding import NamedSharding, PartitionSpec as P
 
 from repro.configs.base import ArchSpec, ShapeSpec
+from repro.compat import shard_map as compat_shard_map
 from repro.launch.mesh import data_axes
 from repro.models import recsys as fm_model
 from repro.models import transformer as lm
@@ -370,7 +371,7 @@ def build_engine_cell(spec: ArchSpec, shape: ShapeSpec, mesh) -> Workload:
             route_cap=cfg.route_cap,
         )
 
-    smap = jax.shard_map(
+    smap = compat_shard_map(
         step,
         mesh=mesh,
         in_specs=(P(axes), P(axes), P(axes), P(axes), P(), P(), P(), P()),
@@ -382,7 +383,6 @@ def build_engine_cell(spec: ArchSpec, shape: ShapeSpec, mesh) -> Workload:
                 "n_reflexive": P(axes),
             },
         ),
-        check_vma=False,
     )
 
     rows = (cap + 1) * n_dev

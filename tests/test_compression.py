@@ -6,8 +6,12 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
+
+pytest.importorskip("hypothesis")
 from hypothesis import given, settings, strategies as st
 
+from repro.compat import shard_map
+from repro.launch.mesh import make_mesh
 from repro.optim.compression import (
     compress_with_feedback,
     compressed_grad_exchange,
@@ -52,9 +56,7 @@ def test_shardmap_pod_exchange():
     """2 fake pods exchange compressed grads; mean matches f32 all-reduce."""
     if jax.device_count() < 2:
         pytest.skip("needs >= 2 devices (run under forced host device count)")
-    mesh = jax.make_mesh(
-        (2,), ("pod",), axis_types=(jax.sharding.AxisType.Auto,)
-    )
+    mesh = make_mesh((2,), ("pod",))
     from jax.sharding import PartitionSpec as P
 
     g_pods = jnp.stack(
@@ -67,7 +69,7 @@ def test_shardmap_pod_exchange():
         return mean["g"][None], new_e["g"][None]
 
     out, new_e = jax.jit(
-        jax.shard_map(
+        shard_map(
             body, mesh=mesh, in_specs=(P("pod"), P("pod")), out_specs=(P("pod"), P("pod")),
         )
     )(g_pods, e_pods)

@@ -19,9 +19,10 @@ _SCRIPT = textwrap.dedent(
     from repro.core.materialise import materialise
     from repro.core.engine_jax import JaxEngine
     from repro.core.triples import pack
+    from repro.launch.mesh import make_mesh
 
     assert len(jax.devices()) == 4, jax.devices()
-    mesh = jax.make_mesh((4,), ("data",))
+    mesh = make_mesh((4,), ("data",))
     for name, ds in [("pex", pex), ("pex_rr", pex_rule_rewrite),
                      ("clique6", lambda: single_clique(6))]:
         facts, prog, dic = ds()
@@ -63,9 +64,9 @@ _ROUTED_SCRIPT = textwrap.dedent(
     from repro.core.materialise import materialise
     from repro.core.engine_jax import JaxEngine
     from repro.core.triples import pack
+    from repro.launch.mesh import make_mesh
 
-    mesh = jax.make_mesh((4,), ("data",),
-                         axis_types=(jax.sharding.AxisType.Auto,))
+    mesh = make_mesh((4,), ("data",))
     for name, ds in [("pex", pex), ("pex_rr", pex_rule_rewrite),
                      ("clique6", lambda: single_clique(6)),
                      ("uobm", lambda: generate(**PROFILES["uobm_like"]))]:

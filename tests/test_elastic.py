@@ -16,13 +16,11 @@ PROG = textwrap.dedent(
     from jax.sharding import NamedSharding, PartitionSpec as P
     sys.path.insert(0, "%(src)s")
     from repro.ckpt import save_checkpoint, restore_checkpoint
+    from repro.launch.mesh import make_mesh
 
     d = sys.argv[1]
-    mesh8 = jax.make_mesh((8,), ("data",),
-                          axis_types=(jax.sharding.AxisType.Auto,))
-    mesh2 = jax.make_mesh((2,), ("data",),
-                          devices=jax.devices()[:2],
-                          axis_types=(jax.sharding.AxisType.Auto,))
+    mesh8 = make_mesh((8,), ("data",))
+    mesh2 = make_mesh((2,), ("data",), devices=jax.devices()[:2])
 
     tree = {
         "w": jnp.arange(64, dtype=jnp.float32).reshape(16, 4),

@@ -1,0 +1,265 @@
+"""Incremental materialisation maintenance vs the from-scratch oracle.
+
+The oracle is Theorem-1 style: after any sequence of add/delete updates, the
+incremental state must equal the from-scratch REW materialisation of the
+updated explicit fact set — same rho (min-ID representatives are
+order-independent, so reps must match exactly), same normal-form store, and
+therefore the same expansion T^rho.
+"""
+
+import numpy as np
+import pytest
+
+from repro.core.incremental import (
+    add_facts,
+    delete_facts,
+    materialise_incremental,
+    normal_forms,
+)
+from repro.core.materialise import expand, materialise_rew
+from repro.core.triples import pack
+from repro.data.datasets import pex, single_clique
+from repro.data.generator import generate, sample_update_stream
+
+
+def _packset(spo):
+    return set(pack(np.asarray(spo, np.int32).reshape(-1, 3)).tolist())
+
+
+def _explicit_apply(explicit, op, delta):
+    """Oracle-side explicit-set bookkeeping (same semantics as the state)."""
+    delta = np.asarray(delta, np.int32).reshape(-1, 3)
+    cur = _packset(explicit)
+    if op == "add":
+        cur |= _packset(delta)
+    else:
+        cur -= _packset(delta)
+    from repro.core.triples import unpack
+
+    keys = np.asarray(sorted(cur), dtype=np.int64)
+    return unpack(keys) if keys.shape[0] else np.zeros((0, 3), np.int32)
+
+
+def assert_matches_scratch(state, explicit, program, n_resources, expand_check=False):
+    ref = materialise_rew(explicit, program, n_resources)
+    assert _packset(state.triples()) == _packset(ref.triples())
+    assert (state.rep[: ref.rep.shape[0]] == ref.rep).all()
+    # the incremental rep may be longer (grown by adds); the tail is identity
+    tail = state.rep[ref.rep.shape[0] :]
+    assert (tail == np.arange(ref.rep.shape[0], state.rep.shape[0])).all()
+    if expand_check:
+        lhs = expand(state.triples(), state.rep)
+        rhs = expand(ref.triples(), ref.rep)
+        assert lhs == rhs
+
+
+# ---------------------------------------------------------------------------
+# additions
+# ---------------------------------------------------------------------------
+
+def test_add_matches_scratch_pex():
+    facts, prog, dic = pex()
+    base, extra = facts[:1], facts[1:]
+    state = materialise_incremental(base, prog, dic.n_resources)
+    add_facts(state, extra)
+    assert_matches_scratch(state, facts, prog, dic.n_resources, expand_check=True)
+
+
+def test_add_new_resources_grows_rep():
+    facts, prog, dic = pex()
+    state = materialise_incremental(facts, prog, dic.n_resources)
+    new_id = dic.n_resources + 5
+    delta = np.asarray([[new_id, facts[0, 1], facts[0, 2]]], np.int32)
+    add_facts(state, delta)
+    all_facts = np.concatenate([facts, delta], axis=0)
+    assert_matches_scratch(state, all_facts, prog, new_id + 1)
+
+
+def test_add_empty_delta_is_noop():
+    facts, prog, dic = pex()
+    state = materialise_incremental(facts, prog, dic.n_resources)
+    before = _packset(state.triples())
+    add_facts(state, np.zeros((0, 3), np.int32))
+    add_facts(state, facts)  # re-adding explicit facts is also a no-op
+    assert _packset(state.triples()) == before
+    assert_matches_scratch(state, facts, prog, dic.n_resources)
+
+
+# ---------------------------------------------------------------------------
+# deletions and clique splitting
+# ---------------------------------------------------------------------------
+
+def test_delete_sameas_edge_splits_clique():
+    facts, prog, dic = single_clique(6)  # a0~a1~...~a5, one clique
+    state = materialise_incremental(facts, prog, dic.n_resources)
+    mid = facts[2:3]  # a2 ~ a3: splits into {a0,a1,a2} and {a3,a4,a5}
+    delete_facts(state, mid)
+    remaining = np.concatenate([facts[:2], facts[3:]], axis=0)
+    assert_matches_scratch(
+        state, remaining, prog, dic.n_resources, expand_check=True
+    )
+    # the split is observable: two cliques instead of one
+    reps = np.unique(state.rep[np.unique(facts[:, [0, 2]])])
+    assert reps.shape[0] == 2
+
+
+def test_delete_derived_sameas_support():
+    """Deleting one :idProp edge must split the rule-derived clique."""
+    facts, prog, dic = generate(
+        n_groups=3, group_size=4, n_spokes_per=2, n_plain=30, hierarchy_depth=2
+    )
+    state = materialise_incremental(facts, prog, dic.n_resources)
+    idp = dic.id_of(":idProp")
+    id_rows = np.flatnonzero(facts[:, 1] == idp)
+    delta = facts[id_rows[:2]]
+    delete_facts(state, delta)
+    remaining = facts[~np.isin(pack(facts), pack(delta))]
+    assert_matches_scratch(state, remaining, prog, dic.n_resources)
+
+
+def test_delete_empty_and_unknown_delta_is_noop():
+    facts, prog, dic = pex()
+    state = materialise_incremental(facts, prog, dic.n_resources)
+    before = _packset(state.triples())
+    delete_facts(state, np.zeros((0, 3), np.int32))
+    delete_facts(state, np.asarray([[9, 9, 9]], np.int32))  # not explicit
+    assert _packset(state.triples()) == before
+    assert_matches_scratch(state, facts, prog, dic.n_resources)
+
+
+def test_delete_everything():
+    for ds in (lambda: pex(), lambda: single_clique(5)):
+        facts, prog, dic = ds()
+        state = materialise_incremental(facts, prog, dic.n_resources)
+        delete_facts(state, facts)
+        assert state.triples().shape[0] == 0
+        assert (state.rep == np.arange(dic.n_resources)).all()
+        assert_matches_scratch(
+            state, np.zeros((0, 3), np.int32), prog, dic.n_resources
+        )
+
+
+def test_clique_split_property():
+    """Property-style: deleting ANY random subset of sameAs edges (plus the
+    empty and full subsets) and re-materialising equals the incremental
+    result — including payload triples hanging off the clique."""
+    from repro.data.datasets import clique_with_spokes
+
+    facts, prog, dic = clique_with_spokes(7, 4)
+    sa_rows = np.flatnonzero(facts[:, 1] == dic.id_of("owl:sameAs"))
+    rng = np.random.default_rng(42)
+    subsets = [np.zeros(0, np.int64), sa_rows]  # edge cases first
+    for _ in range(6):
+        m = int(rng.integers(1, sa_rows.shape[0] + 1))
+        subsets.append(rng.choice(sa_rows, size=m, replace=False))
+    for sub in subsets:
+        state = materialise_incremental(facts, prog, dic.n_resources)
+        delta = facts[np.asarray(sub, dtype=np.int64)]
+        delete_facts(state, delta)
+        remaining = (
+            facts[~np.isin(pack(facts), pack(delta))] if delta.shape[0] else facts
+        )
+        assert_matches_scratch(state, remaining, prog, dic.n_resources)
+
+
+def test_add_then_delete_roundtrip():
+    """add(D); delete(D) returns to the original materialisation."""
+    facts, prog, dic = generate(
+        n_groups=2, group_size=3, n_spokes_per=1, n_plain=20, hierarchy_depth=1
+    )
+    state = materialise_incremental(facts, prog, dic.n_resources)
+    before = _packset(state.triples())
+    rep_before = state.rep.copy()
+    idp = dic.id_of(":idProp")
+    # a bridge edge that merges two previously-distinct cliques
+    g0 = facts[facts[:, 1] == idp][0, 0]
+    g1 = facts[facts[:, 1] == idp][-1, 0]
+    vid = dic.intern(":bridge")
+    bridge = np.asarray(
+        [[g0, idp, vid], [g1, idp, vid]], np.int32
+    )
+    add_facts(state, bridge)
+    assert _packset(state.triples()) != before  # the merge happened
+    delete_facts(state, bridge)
+    assert _packset(state.triples()) == before
+    assert (state.rep[: rep_before.shape[0]] == rep_before).all()
+
+
+# ---------------------------------------------------------------------------
+# generated update streams (the acceptance-criteria oracle)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize(
+    "gen_kw, seed",
+    [
+        (dict(n_groups=3, group_size=3, n_spokes_per=2, n_plain=40,
+              hierarchy_depth=2), 0),
+        (dict(n_groups=2, group_size=4, n_spokes_per=1, n_plain=30,
+              hierarchy_depth=1, chain_rules=True), 1),
+        (dict(n_groups=4, group_size=3, n_spokes_per=2, n_plain=25,
+              hierarchy_depth=2, hometown_groups=1, hometown_size=5), 2),
+    ],
+    ids=["claros_ish", "chains_ish", "uobm_ish"],
+)
+def test_update_streams_match_scratch(gen_kw, seed):
+    facts, prog, dic = generate(**gen_kw, seed=seed)
+    events = sample_update_stream(
+        facts, dic, n_events=5, batch=10, seed=seed
+    )
+    state = materialise_incremental(facts, prog, dic.n_resources)
+    explicit = facts
+    for op, delta in events:
+        explicit = _explicit_apply(explicit, op, delta)
+        if op == "add":
+            add_facts(state, delta)
+        else:
+            delete_facts(state, delta)
+        assert_matches_scratch(state, explicit, prog, dic.n_resources)
+
+
+# ---------------------------------------------------------------------------
+# kernel-batched normal forms + engine integration
+# ---------------------------------------------------------------------------
+
+def test_normal_forms_kernel_parity():
+    rng = np.random.default_rng(0)
+    rep = np.arange(300, dtype=np.int32)
+    rep[rng.integers(0, 300, size=60)] = rng.integers(0, 50, size=60)
+    from repro.core.uf import compress_np
+
+    rep = compress_np(rep)
+    spo = rng.integers(0, 300, size=(200, 3)).astype(np.int32)
+    np_out = normal_forms(spo, rep, use_kernel=False)
+    k_out = normal_forms(spo, rep, use_kernel=True)
+    assert (np_out == k_out).all()
+
+
+def test_delete_with_kernel_normal_forms():
+    facts, prog, dic = single_clique(5)
+    state = materialise_incremental(
+        facts, prog, dic.n_resources, use_kernel=True
+    )
+    delete_facts(state, facts[1:2])
+    remaining = np.concatenate([facts[:1], facts[2:]], axis=0)
+    assert_matches_scratch(state, remaining, prog, dic.n_resources)
+
+
+def test_engine_materialise_incremental():
+    from repro.core.engine_jax import JaxEngine
+
+    facts, prog, dic = pex()
+    updates = [
+        ("add", np.asarray([[facts[0, 0], facts[0, 1], facts[2, 2]]], np.int32)),
+        ("delete", facts[1:2]),
+    ]
+    eng = JaxEngine(
+        dic.n_resources, capacity=256, bind_cap=256, out_cap=256, rewrite_cap=256
+    )
+    spo, rep, stats = eng.materialise_incremental(facts, prog, updates)
+
+    explicit = facts
+    for op, delta in updates:
+        explicit = _explicit_apply(explicit, op, delta)
+    ref = materialise_rew(explicit, prog, dic.n_resources)
+    assert _packset(spo) == _packset(ref.triples())
+    assert (rep == ref.rep).all()

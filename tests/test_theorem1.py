@@ -13,6 +13,8 @@ by the deterministic tests below.
 
 import numpy as np
 import pytest
+
+pytest.importorskip("hypothesis")
 from hypothesis import given, settings, strategies as st
 
 from repro.core.materialise import (
