@@ -1,85 +1,185 @@
-"""Incremental maintenance vs from-scratch re-materialisation.
+"""Incremental maintenance vs from-scratch re-materialisation, host vs sharded.
 
 For each dataset profile: materialise once, then apply a sampled update
-stream (repro.data.generator.sample_update_stream) twice — once through
-``repro.core.incremental`` (add_facts/delete_facts on the standing state)
-and once by re-running ``materialise_rew`` from scratch on the updated
-explicit set after every event.  Reports per-event means and the speedup;
-the oracle equality (same normal-form store + rho after every event) is
-asserted as the benchmark runs, so the numbers are trustworthy by
-construction — the successor paper's (arXiv:1505.00212) headline claim is
-exactly that maintenance beats recomputation on small update batches.
+stream (repro.data.generator.sample_update_stream) three ways —
+
+  * **host**:    ``repro.core.incremental`` add_facts/delete_facts (the PR 1
+                 reference subsystem, every maintenance round on the host),
+  * **engine**:  the sharded update rounds of ``repro.core.incremental_spmd``
+                 through ``JaxEngine.add_facts/delete_facts`` (epoch-tagged
+                 tombstones + owner-routed delta exchange; single device
+                 here, same code the mesh wraps with shard_map),
+  * **scratch**: re-running ``materialise_rew`` from scratch on the updated
+                 explicit set after every event.
+
+Oracle equality (same normal-form store + rho after every event, all three
+ways) is asserted as the benchmark runs, so the numbers are trustworthy by
+construction.  ``steady_*`` means exclude each op kind's first occurrence —
+that is where the engine path pays its jit compilation, which a standing
+service pays once.
+
+Caveat (same as bench_scaling): this container has ONE physical core, and
+XLA CPU's int64 sort runs ~7x slower than numpy's (measured: 191 ms vs
+~25 ms for a 262k-row argsort).  Every engine round pays a handful of
+arena-wide padded sorts — the currency the design spends to buy mesh
+parallelism — so single-core wall-clock flatters the host path; the honest
+scaling signal is that per-event device work is a fixed number of
+bulk-synchronous rounds whose sorts shard with the mesh, while the host
+path is serial by construction.  The JSON rows carry per-event timings so
+future PRs can track both.
+
+``main(out_json=...)`` (or ``benchmarks/run.py incremental``) writes the rows
+to BENCH_incremental.json so the perf trajectory is machine-readable.
 """
 
 from __future__ import annotations
 
+import json
 import time
 
 import numpy as np
 
+from repro.core.engine_jax import JaxEngine
 from repro.core.incremental import add_facts, delete_facts, materialise_incremental
 from repro.core.materialise import materialise_rew
-from repro.core.triples import pack, unpack
+from repro.core.triples import apply_op as _apply_explicit, pack
 from repro.data.generator import PROFILES, generate, sample_update_stream
 
 
-def _apply_explicit(explicit: np.ndarray, op: str, delta: np.ndarray) -> np.ndarray:
-    cur = set(pack(explicit).tolist())
-    d = set(pack(delta).tolist())
-    cur = (cur | d) if op == "add" else (cur - d)
-    keys = np.asarray(sorted(cur), dtype=np.int64)
-    return unpack(keys) if keys.shape[0] else np.zeros((0, 3), np.int32)
+def _steady_mask(events) -> np.ndarray:
+    """False for each op kind's first occurrence (compile warm-up events)."""
+    seen: set[str] = set()
+    mask = np.ones(len(events), dtype=bool)
+    for i, (op, _delta) in enumerate(events):
+        if op not in seen:
+            seen.add(op)
+            mask[i] = False
+    return mask
 
 
-def run_one(name: str, kw: dict, n_events: int = 8, batch: int = 24, seed: int = 0) -> dict:
+def run_one(
+    name: str, kw: dict, n_events: int = 8, batch: int = 24, seed: int = 0
+) -> dict:
     facts, program, dic = generate(**kw, seed=seed)
-    events = sample_update_stream(facts, dic, n_events=n_events, batch=batch, seed=seed)
+    events = sample_update_stream(
+        facts, dic, n_events=n_events, batch=batch, seed=seed
+    )
 
+    # host base + engine base
     t0 = time.perf_counter()
-    state = materialise_incremental(facts, program, dic.n_resources)
-    base_s = time.perf_counter() - t0
+    host_state = materialise_incremental(facts, program, dic.n_resources)
+    host_base_s = time.perf_counter() - t0
 
-    inc_s = scr_s = 0.0
+    # padded join/sort cost scales with the caps, so size the arena to the
+    # workload (~4x the explicit set for derivations + tombstone churn) and
+    # let the engine's targeted retry growth absorb misestimates
+    cap = 1 << max(12, int(np.ceil(np.log2(4 * facts.shape[0]))))
+    eng = JaxEngine(
+        dic.n_resources, capacity=cap, bind_cap=cap // 2,
+        out_cap=cap // 2, rewrite_cap=cap // 4, seed_chunk=8192,
+    )
+    t0 = time.perf_counter()
+    eng_state = eng.materialise_state(facts, program)
+    eng_base_s = time.perf_counter() - t0
+
+    host_ev, eng_ev, scr_ev = [], [], []
     explicit = facts
     for op, delta in events:
         explicit = _apply_explicit(explicit, op, delta)
+
         t0 = time.perf_counter()
-        (add_facts if op == "add" else delete_facts)(state, delta)
-        inc_s += time.perf_counter() - t0
+        (add_facts if op == "add" else delete_facts)(host_state, delta)
+        host_ev.append(time.perf_counter() - t0)
+
+        t0 = time.perf_counter()
+        (eng.add_facts if op == "add" else eng.delete_facts)(eng_state, delta)
+        eng_ev.append(time.perf_counter() - t0)
+
         t0 = time.perf_counter()
         ref = materialise_rew(explicit, program, dic.n_resources)
-        scr_s += time.perf_counter() - t0
-        assert set(pack(state.triples()).tolist()) == set(pack(ref.triples()).tolist()), (
-            name, op
+        scr_ev.append(time.perf_counter() - t0)
+
+        want = set(pack(ref.triples()).tolist())
+        assert set(pack(host_state.triples()).tolist()) == want, (name, op, "host")
+        assert (host_state.rep[: ref.rep.shape[0]] == ref.rep).all(), (name, op)
+        assert set(pack(eng.state_triples(eng_state)).tolist()) == want, (
+            name, op, "engine",
         )
-        assert (state.rep[: ref.rep.shape[0]] == ref.rep).all(), (name, op)
+        assert (eng.state_rep(eng_state)[: ref.rep.shape[0]] == ref.rep).all(), (
+            name, op, "engine-rep",
+        )
+
+    host_ev, eng_ev, scr_ev = map(np.asarray, (host_ev, eng_ev, scr_ev))
+    steady = _steady_mask(events)
+    if not steady.any():  # single-op-kind streams: fall back to all events
+        steady[:] = True
+
+    def mean(x, m=None):
+        x = x if m is None else x[m]
+        return float(x.mean()) if x.size else 0.0
 
     return {
         "dataset": name,
         "facts": int(facts.shape[0]),
         "events": len(events),
-        "base_s": round(base_s, 3),
-        "incremental_s_per_event": round(inc_s / len(events), 4),
-        "scratch_s_per_event": round(scr_s / len(events), 4),
-        "speedup": round(scr_s / max(inc_s, 1e-9), 2),
+        "host_base_s": round(host_base_s, 3),
+        "engine_base_s": round(eng_base_s, 3),
+        "host_s_per_event": round(mean(host_ev), 4),
+        "engine_s_per_event": round(mean(eng_ev), 4),
+        "scratch_s_per_event": round(mean(scr_ev), 4),
+        "steady_host_s_per_event": round(mean(host_ev, steady), 4),
+        "steady_engine_s_per_event": round(mean(eng_ev, steady), 4),
+        "steady_scratch_s_per_event": round(mean(scr_ev, steady), 4),
+        "speedup_host_vs_scratch": round(
+            mean(scr_ev, steady) / max(mean(host_ev, steady), 1e-9), 2
+        ),
+        "speedup_engine_vs_scratch": round(
+            mean(scr_ev, steady) / max(mean(eng_ev, steady), 1e-9), 2
+        ),
+        "speedup_engine_vs_host": round(
+            mean(host_ev, steady) / max(mean(eng_ev, steady), 1e-9), 2
+        ),
+        "per_event": {
+            "ops": [op for op, _ in events],
+            "host_s": [round(float(x), 4) for x in host_ev],
+            "engine_s": [round(float(x), 4) for x in eng_ev],
+            "scratch_s": [round(float(x), 4) for x in scr_ev],
+        },
     }
 
 
-def main(profiles=None) -> list[dict]:
+def main(profiles=None, out_json: str | None = None) -> list[dict]:
     rows = []
     print(
-        "dataset           facts  events  base_s   inc_s/ev  scratch_s/ev  speedup"
+        "dataset           facts  ev  host/ev  engine/ev  scratch/ev"
+        "  eng-vs-scr  eng-vs-host   (steady means)"
     )
     for name, kw in (profiles or PROFILES).items():
         r = run_one(name, kw)
         print(
-            f"{r['dataset']:17s} {r['facts']:6d} {r['events']:6d} {r['base_s']:8.3f}"
-            f" {r['incremental_s_per_event']:9.4f} {r['scratch_s_per_event']:12.4f}"
-            f" x{r['speedup']}"
+            f"{r['dataset']:17s} {r['facts']:6d} {r['events']:3d}"
+            f" {r['steady_host_s_per_event']:8.4f} {r['steady_engine_s_per_event']:10.4f}"
+            f" {r['steady_scratch_s_per_event']:11.4f}"
+            f"  x{r['speedup_engine_vs_scratch']:<9} x{r['speedup_engine_vs_host']}"
         )
         rows.append(r)
+    if out_json:
+        doc = {
+            "caveat": (
+                "single-core container: XLA CPU int64 argsort runs ~7x slower "
+                "than numpy (191ms vs ~25ms at 262k rows), and the engine pays "
+                "a handful of arena-wide padded sorts per round — wall-clock "
+                "here measures sort bandwidth, not the mesh scaling the "
+                "sharded path buys; see bench_scaling for the same caveat on "
+                "the base fixpoint"
+            ),
+            "rows": rows,
+        }
+        with open(out_json, "w") as fh:
+            json.dump(doc, fh, indent=2)
+        print(f"[bench_incremental] wrote {out_json}")
     return rows
 
 
 if __name__ == "__main__":
-    main()
+    main(out_json="BENCH_incremental.json")

@@ -4,6 +4,8 @@
   Table 3 -> bench_scaling          (wall times across shard counts)
   §5      -> bench_sparql           (query answering on T vs T^rho)
   kernels -> bench_kernels          (Pallas interpret-mode vs jnp oracle)
+  updates -> bench_incremental      (host vs sharded maintenance rounds vs
+                                     from-scratch; writes BENCH_incremental.json)
 
 ``python -m benchmarks.run [section ...]`` — default: all sections.
 """
@@ -15,7 +17,9 @@ import time
 
 
 def main() -> None:
-    sections = sys.argv[1:] or ["materialisation", "scaling", "sparql", "kernels"]
+    sections = sys.argv[1:] or [
+        "materialisation", "scaling", "sparql", "kernels", "incremental",
+    ]
     t0 = time.time()
     if "materialisation" in sections:
         print("=" * 72)
@@ -45,6 +49,13 @@ def main() -> None:
         from benchmarks import bench_kernels
 
         bench_kernels.main()
+    if "incremental" in sections:
+        print("=" * 72)
+        print("Update streams: host vs sharded maintenance vs from-scratch")
+        print("=" * 72)
+        from benchmarks import bench_incremental
+
+        bench_incremental.main(out_json="BENCH_incremental.json")
     print(f"\n[benchmarks] total {time.time() - t0:.1f}s")
 
 

@@ -21,6 +21,12 @@ class EngineConfig:
     rewrite_cap: int = 1 << 14
     # owner-routing bucket rows per destination shard (None = all-gather)
     route_cap: int | None = 1 << 12
+    # replicated query rows per tombstone-seed / membership probe batch
+    # (the incremental update path; JaxEngine.from_config plumbs it through)
+    seed_chunk: int = 2048
+    # out rows per delta/tomb plan during incremental updates (None = derive
+    # from out_cap); full-evaluation plans always use out_cap
+    delta_out_cap: int | None = None
 
 
 CONFIG = EngineConfig()
@@ -32,6 +38,7 @@ REDUCED = EngineConfig(
     out_cap=256,
     rewrite_cap=256,
     route_cap=64,
+    seed_chunk=64,
 )
 
 SHAPES = (

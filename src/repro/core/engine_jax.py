@@ -60,8 +60,14 @@ I32 = jnp.int32
 # numpy scalar (not jnp): module import happens outside the enable_x64 scope
 KEY_MAX = np.int64((1 << 63) - 1)  # > any packed key (IDs <= MAX_ID)
 
-# epoch predicates for matching
+# epoch predicates for matching.  PRED_OLD/DELTA/ALL drive the forward
+# (derivation) rounds; PRED_TSTORE/TDELTA drive the DRed overdelete waves of
+# the incremental delete path (repro.core.incremental_spmd): deletions are
+# epoch-tagged *tombstones* in the ``tomb`` column (-1 = live, else the
+# overdelete wave that retracted the row), and wave w matches
+# Delta = (tomb == w-1) against the full pre-deletion store.
 PRED_OLD, PRED_DELTA, PRED_ALL = 0, 1, 2
+PRED_TSTORE, PRED_TDELTA = 3, 4
 
 
 def _pack3(spo: jnp.ndarray) -> jnp.ndarray:
@@ -78,8 +84,23 @@ def _pack_cols(cols: list[jnp.ndarray]) -> jnp.ndarray:
     return key
 
 
-def _epoch_ok(epoch: jnp.ndarray, marked: jnp.ndarray, r, pred: int) -> jnp.ndarray:
+def _epoch_ok(
+    epoch: jnp.ndarray, marked: jnp.ndarray, tomb: jnp.ndarray, r, pred: int
+) -> jnp.ndarray:
+    """Row-selection predicates.
+
+    The forward predicates ignore ``tomb``: process_candidates and the
+    forward rounds only ever run when every tombstone has been finalised
+    into ``marked`` (the invariant kept by incremental_spmd).  The tombstone
+    predicates match the *pre-deletion* store — a tombstoned row is still a
+    join candidate during the backward closure, exactly like DRed matching
+    deleted facts against T.
+    """
     live = (epoch >= 0) & ~marked
+    if pred == PRED_TSTORE:
+        return live
+    if pred == PRED_TDELTA:
+        return live & (tomb == r - 1)
     if pred == PRED_OLD:
         return live & (epoch <= r - 2)
     if pred == PRED_DELTA:
@@ -98,8 +119,14 @@ def _match_atom(spo, ok, consts, const_mask, eq_pairs):
 
 
 def _compact(cols: dict, valid: jnp.ndarray, cap: int):
-    """Pack valid rows to the front, truncating at ``cap``."""
-    order = jnp.argsort(~valid, stable=True)[:cap]
+    """Pack valid rows to the front, truncating (or padding) at ``cap``.
+
+    Output rows beyond ``n_valid`` hold garbage and must stay masked by the
+    returned validity — when ``cap`` exceeds the input length the tail
+    repeats the last input row, masked the same way.
+    """
+    order = jnp.argsort(~valid, stable=True)
+    order = order[jnp.clip(jnp.arange(cap), 0, valid.shape[0] - 1)]
     n_valid = valid.sum()
     out_valid = jnp.arange(cap) < n_valid
     out_cols = {v: c[order] for v, c in cols.items()}
@@ -168,8 +195,17 @@ def _atom_static(atom, bound_vars: set[int]):
     return const_mask, tuple(eq_pairs), bound, free
 
 
-def build_plans(rule: Rule, full: bool) -> list[list[_AtomSpec]]:
-    """Delta plans (or the single full-evaluation plan) of a rule."""
+def build_plans(
+    rule: Rule, full: bool, tombstone: bool = False
+) -> list[list[_AtomSpec]]:
+    """Delta plans (or the single full-evaluation plan) of a rule.
+
+    ``tombstone=True`` builds the DRed overdelete variants: the delta atom
+    matches the last overdelete wave (PRED_TDELTA) and every other atom the
+    full pre-deletion store (PRED_TSTORE) — the device analogue of the host
+    path's ``eval_rule_delta(rule, T, T, frontier)``.
+    """
+    assert not (full and tombstone)
     plans = []
     delta_positions = [0] if full else list(range(len(rule.body)))
     for i in delta_positions:
@@ -181,7 +217,11 @@ def build_plans(rule: Rule, full: bool) -> list[list[_AtomSpec]]:
                 pred = PRED_ALL
             else:
                 pred = PRED_OLD if j < i else (PRED_DELTA if j == i else PRED_ALL)
-            count_appl = (pred == PRED_DELTA) or (full and j == 0)
+            if tombstone:
+                pred = PRED_TDELTA if pred == PRED_DELTA else PRED_TSTORE
+            count_appl = not tombstone and (
+                (pred == PRED_DELTA) or (full and j == 0)
+            )
             specs.append(_AtomSpec(j, const_mask, eq_pairs, b, f, pred, count_appl))
             bound |= {v for v, _ in b} | {v for v, _ in f}
         plans.append(specs)
@@ -192,10 +232,63 @@ def _gather(x, axis):
     return jax.lax.all_gather(x, axis, tiled=True)
 
 
+def _route_rows(stream, flags, valid, axis, n_shards, route_cap):
+    """Owner-route an (N, 3) triple stream to shard ``subject % n_shards``.
+
+    The bulk analogue of the paper's per-thread insertion into the shared
+    store, shared by process_candidates and the incremental delete path
+    (tombstone waves): each shard routes every row to its owner with one
+    ``all_to_all`` of (n_shards, route_cap) buckets.  ``flags`` is an
+    optional (N, k) int32 array of side columns that ride along with the
+    rows.  Returns ``(stream', flags', valid', overflow)``:
+
+      * ``axis is None`` — identity (single device),
+      * ``route_cap is None`` — all-gather fallback: every shard sees the
+        global stream, masked down to the rows it owns,
+      * otherwise — bucket exchange; per-destination overflow beyond
+        ``route_cap`` raises the engine's capacity-retry via the flag.
+    """
+    if axis is None:
+        return stream, flags, valid, jnp.zeros((), bool)
+    if route_cap is None:
+        me = jax.lax.axis_index(axis)
+        stream = _gather(stream, axis)
+        flags = _gather(flags, axis) if flags is not None else None
+        valid = _gather(valid, axis)
+        own = (stream[:, 0] % n_shards).astype(I32) == me
+        return stream, flags, valid & own, jnp.zeros((), bool)
+    k = 0 if flags is None else flags.shape[1]
+    owner = (stream[:, 0] % n_shards).astype(I32)
+    okey = jnp.where(valid, owner, n_shards)
+    order = jnp.argsort(okey, stable=True).astype(I32)
+    so = okey[order]
+    starts = jnp.searchsorted(so, jnp.arange(n_shards, dtype=I32)).astype(I32)
+    pos = jnp.arange(so.shape[0], dtype=I32) - starts[jnp.clip(so, 0, n_shards - 1)]
+    keep = (so < n_shards) & (pos < route_cap)
+    overflow = jnp.any((so < n_shards) & (pos >= route_cap))
+    cols = [stream[order]]
+    if flags is not None:
+        cols.append(flags[order])
+    cols.append(keep[:, None].astype(I32))
+    payload = jnp.concatenate(cols, axis=1)  # (N, 3 + k + 1)
+    buckets = jnp.zeros((n_shards, route_cap, 3 + k + 1), I32)
+    tgt_shard = jnp.where(keep, so, 0)
+    tgt_slot = jnp.where(keep, pos, route_cap)  # out-of-range -> dropped
+    buckets = buckets.at[tgt_shard, tgt_slot].set(
+        jnp.where(keep[:, None], payload, 0), mode="drop"
+    )
+    recv = jax.lax.all_to_all(buckets, axis, split_axis=0, concat_axis=0, tiled=True)
+    out_stream = recv[..., :3].reshape(-1, 3)
+    out_flags = recv[..., 3 : 3 + k].reshape(-1, k) if flags is not None else None
+    out_valid = recv[..., 3 + k].reshape(-1).astype(bool)
+    return out_stream, out_flags, out_valid, overflow
+
+
 def eval_plan(
     spo,
     epoch,
     marked,
+    tomb,
     r,
     atom_consts,  # (n_atoms, 3) traced rule constants (vars hold garbage 0)
     head_consts,  # (3,) traced
@@ -217,7 +310,7 @@ def eval_plan(
     n_appl = jnp.zeros((), I32)
     overflow = jnp.zeros((), bool)
     for step, spec in enumerate(plan):
-        ok = _epoch_ok(epoch, marked, r, spec.pred)
+        ok = _epoch_ok(epoch, marked, tomb, r, spec.pred)
         ok = _match_atom(spo, ok, atom_consts[spec.index], spec.const_mask, spec.eq_pairs)
         if spec.count_appl:
             n_appl = n_appl + ok.sum().astype(I32)
@@ -249,7 +342,9 @@ def eval_plan(
     )
     out = jnp.stack([outc["s"], outc["p"], outc["o"]], axis=1)
     n_deriv = out_valid.sum().astype(I32)
-    return out, out_valid, n_deriv[None], n_appl[None], (overflow | ov)[None]
+    # bind and out overflow reported separately so the host retry can grow
+    # exactly the capacity that was exhausted
+    return out, out_valid, n_deriv[None], n_appl[None], overflow[None], ov[None]
 
 
 def process_candidates(
@@ -291,6 +386,7 @@ def process_candidates(
     n_used = n_used.reshape(())
     routed = axis is not None and route_cap is not None
     route_overflow = jnp.zeros((), bool)
+    pair_overflow = jnp.zeros((), bool)
 
     if axis is not None and not routed:
         cands = _gather(cands, axis)
@@ -307,7 +403,7 @@ def process_candidates(
         pcols, pvalid, p_ov = _compact(
             {"a": cands[:, 0], "b": cands[:, 2]}, is_pair, pair_cap
         )
-        route_overflow |= p_ov
+        pair_overflow |= p_ov
         pairs = _gather(jnp.stack([pcols["a"], pcols["b"]], axis=1), axis)
         pair_valid = _gather(pvalid, axis)
     else:
@@ -367,32 +463,12 @@ def process_candidates(
     if routed:
         # route rows to their owners: one all_to_all of (n_shards, route_cap)
         # buckets replaces sorting the global padded stream on every shard
-        owner = (stream[:, 0] % n_shards).astype(I32)
-        okey = jnp.where(stream_v, owner, n_shards)
-        order_r = jnp.argsort(okey, stable=True).astype(I32)
-        so = okey[order_r]
-        starts = jnp.searchsorted(so, jnp.arange(n_shards, dtype=I32)).astype(I32)
-        pos = jnp.arange(so.shape[0], dtype=I32) - starts[jnp.clip(so, 0, n_shards - 1)]
-        keep = (so < n_shards) & (pos < route_cap)
-        route_overflow |= jnp.any((so < n_shards) & (pos >= route_cap))
-        payload = jnp.concatenate(
-            [
-                stream[order_r],
-                stream_refl[order_r, None].astype(I32),
-                keep[:, None].astype(I32),
-            ],
-            axis=1,
-        )  # (N, 5): s, p, o, refl, valid
-        buckets = jnp.zeros((n_shards, route_cap, 5), I32)
-        tgt_shard = jnp.where(keep, so, 0)
-        tgt_slot = jnp.where(keep, pos, route_cap)  # out-of-range -> dropped
-        buckets = buckets.at[tgt_shard, tgt_slot].set(
-            jnp.where(keep[:, None], payload, 0), mode="drop"
+        stream, refl_col, stream_v, r_ov = _route_rows(
+            stream, stream_refl[:, None].astype(I32), stream_v,
+            axis, n_shards, route_cap,
         )
-        recv = jax.lax.all_to_all(buckets, axis, split_axis=0, concat_axis=0, tiled=True)
-        stream = recv[..., :3].reshape(-1, 3)
-        stream_refl = recv[..., 3].reshape(-1).astype(bool)
-        stream_v = recv[..., 4].reshape(-1).astype(bool)
+        stream_refl = refl_col[:, 0].astype(bool)
+        route_overflow |= r_ov
     elif axis is not None:
         own = (stream[:, 0] % n_shards) == jax.lax.axis_index(axis)
         stream_v = stream_v & own
@@ -430,20 +506,67 @@ def process_candidates(
     is_refl = fresh & stream_refl[order]
     n_refl = is_refl.sum().astype(I32)
 
+    # per-position resource masks of the fresh delta: the host driver skips
+    # every delta plan whose delta atom's constants are incompatible (the
+    # bulk analogue of the numpy engine's delta-first dead-plan elimination)
+    fm = []
+    for pos in range(3):
+        fm.append(
+            jnp.zeros(rep.shape[0], bool).at[
+                jnp.where(fresh, rows[:, pos], 0)
+            ].max(fresh)
+        )
+    fresh_masks = jnp.stack(fm)  # (3, n_res)
+    if axis is not None:
+        fresh_masks = jax.lax.psum(fresh_masks.astype(I32), axis) > 0
+
     flags = {
         "rep_changed": rep_changed,
         "contradiction": contradiction,
-        "overflow": (rw_overflow | insert_overflow | route_overflow)[None],
+        "ov_rewrite": rw_overflow[None],
+        "ov_store": insert_overflow[None],
+        "ov_route": route_overflow[None],
+        "ov_pair": pair_overflow[None],
         "n_new": n_fresh[None],
         "n_pairs": n_pairs,
         "n_marked": changed.sum().astype(I32)[None],
         "n_reflexive": n_refl[None],
+        "fresh_masks": fresh_masks,
     }
     return spo, epoch, marked, n_used[None], rep, flags
 
 
 class CapacityError(RuntimeError):
     pass
+
+
+@dataclass
+class EngineState:
+    """Device-resident materialisation state that survives update batches.
+
+    The arena columns live sharded on the mesh; ``rep`` is replicated;
+    ``explicit`` is the current explicit fact set (host, original IDs) and
+    ``r`` the running round counter — epochs keep increasing across updates
+    so the delta discipline of :func:`_epoch_ok` carries over unchanged.
+    ``tomb`` is -1 everywhere except inside a delete operation's backward
+    pass (see :mod:`repro.core.incremental_spmd`).
+    """
+
+    spo: jnp.ndarray
+    epoch: jnp.ndarray
+    marked: jnp.ndarray
+    tomb: jnp.ndarray
+    n_used: jnp.ndarray
+    rep: jnp.ndarray
+    program: Program
+    base_program: Program
+    explicit: np.ndarray
+    r: int
+    stats: MatStats
+
+    @property
+    def n_res(self) -> int:
+        return int(self.rep.shape[0])
 
 
 class JaxEngine:
@@ -453,6 +576,11 @@ class JaxEngine:
     to run distributed; capacities are then per shard.  ``materialise``
     retries with doubled capacities on overflow, so callers normally never
     see :class:`CapacityError`.
+
+    ``materialise_state`` returns a device-resident :class:`EngineState`
+    that :meth:`add_facts` / :meth:`delete_facts` maintain on the
+    accelerator (epoch-tagged tombstones + owner-routed delta exchange; the
+    algorithms live in :mod:`repro.core.incremental_spmd`).
     """
 
     def __init__(
@@ -465,6 +593,9 @@ class JaxEngine:
         mesh=None,
         axis: str = "data",
         route_cap: int | None = None,
+        seed_chunk: int = 2048,
+        delta_out_cap: int | None = None,
+        use_kernel: bool = False,
     ) -> None:
         self.n_resources = n_resources
         self.capacity = capacity
@@ -472,10 +603,39 @@ class JaxEngine:
         self.out_cap = out_cap
         self.rewrite_cap = rewrite_cap
         self.route_cap = route_cap
+        # compacted sameAs-pair rows gathered between shards in routed mode;
+        # grows independently so a pair burst cannot masquerade as a route
+        # overflow (which would retry without ever converging)
+        self.pair_cap = min(out_cap, 4096)
+        self.seed_chunk = seed_chunk
+        # delta/tomb plans of incremental updates emit into much smaller
+        # buffers than full-evaluation plans — the candidate stream (and its
+        # sorts) then scales with the update's blast radius, not with the
+        # base fixpoint's worst round.  The base run itself uses ``out_cap``
+        # for every plan (its early deltas are dataset-sized).
+        self.delta_out = delta_out_cap or min(out_cap, max(1 << 12, out_cap >> 4))
+        self._active_delta_out = out_cap
+        self.use_kernel = use_kernel
         self.mesh = mesh
         self.axis = axis if mesh is not None else None
         self.n_shards = int(np.prod(mesh.devices.shape)) if mesh is not None else 1
         self._fns: dict = {}
+
+    @classmethod
+    def from_config(cls, cfg, mesh=None, axis: str = "data", **overrides):
+        """Build an engine from a :mod:`repro.configs.sameas_rew` EngineConfig."""
+        kw = dict(
+            n_resources=cfg.n_resources,
+            capacity=cfg.capacity,
+            bind_cap=cfg.bind_cap,
+            out_cap=cfg.out_cap,
+            rewrite_cap=cfg.rewrite_cap,
+            route_cap=cfg.route_cap,
+            seed_chunk=getattr(cfg, "seed_chunk", 2048),
+            delta_out_cap=getattr(cfg, "delta_out_cap", None),
+        )
+        kw.update(overrides)
+        return cls(mesh=mesh, axis=axis, **kw)
 
     # -- jit wrappers -------------------------------------------------------
     def _wrap(self, fn, in_specs, out_specs):
@@ -487,7 +647,7 @@ class JaxEngine:
             )
         )
 
-    def _get_plan_fn(self, plan_key, plan, head_slots):
+    def _get_plan_fn(self, plan_key, plan, head_slots, out_cap):
         if plan_key not in self._fns:
             a = self.axis
             fn = partial(
@@ -495,20 +655,48 @@ class JaxEngine:
                 plan=plan,
                 head_var_slots=head_slots,
                 bind_cap=self.bind_cap,
-                out_cap=self.out_cap,
+                out_cap=out_cap,
                 axis=a,
             )
             d = P(a) if a else None
             rpl = P() if a else None
             self._fns[plan_key] = self._wrap(
                 fn,
-                in_specs=(d, d, d, rpl, rpl, rpl),
-                out_specs=(d, d, d, d, d),
+                in_specs=(d, d, d, d, rpl, rpl, rpl),
+                out_specs=(d, d, d, d, d, d),
             )
         return self._fns[plan_key]
 
+    def _get_squeeze_fn(self, n_rows: int):
+        """Compact a wide bucketed candidate stream down to out_cap rows.
+
+        Rederive rounds can bucket several full-width plan buffers; their
+        valid rows almost always fit one out_cap buffer, and squeezing once
+        is far cheaper than dragging the padded width through the process
+        step's sorts (which touch the stream ~4x after refl expansion).
+        """
+        key = ("squeeze", n_rows, self.out_cap)
+        if key not in self._fns:
+            a = self.axis
+            out_cap = self.out_cap
+
+            def fn(cands, valid):
+                cols, v, ov = _compact(
+                    {"s": cands[:, 0], "p": cands[:, 1], "o": cands[:, 2]},
+                    valid, out_cap,
+                )
+                out = jnp.stack([cols["s"], cols["p"], cols["o"]], axis=1)
+                return out, v, ov[None]
+
+            d = P(a) if a else None
+            self._fns[key] = self._wrap(fn, in_specs=(d, d), out_specs=(d, d, d))
+        return self._fns[key]
+
     def _get_process_fn(self, n_cand_rows: int):
-        key = ("process", n_cand_rows)
+        key = (
+            "process", n_cand_rows, self.rewrite_cap, self.route_cap,
+            self.out_cap, self.pair_cap,
+        )
         if key not in self._fns:
             a = self.axis
             fn = partial(
@@ -517,18 +705,22 @@ class JaxEngine:
                 axis=a,
                 n_shards=self.n_shards,
                 route_cap=self.route_cap if a is not None else None,
-                pair_cap=min(self.out_cap, 4096),
+                pair_cap=self.pair_cap,
             )
             d = P(a) if a else None
             rpl = P() if a else None
             flag_specs = {
                 "rep_changed": rpl,
                 "contradiction": rpl,
-                "overflow": d,
+                "ov_rewrite": d,
+                "ov_store": d,
+                "ov_route": d,
+                "ov_pair": d,
                 "n_new": d,
                 "n_pairs": rpl,
                 "n_marked": d,
                 "n_reflexive": d,
+                "fresh_masks": rpl,
             }
             self._fns[key] = self._wrap(
                 fn,
@@ -537,41 +729,195 @@ class JaxEngine:
             )
         return self._fns[key]
 
-    # -- driver --------------------------------------------------------------
-    def _run(self, facts: np.ndarray, program: Program, max_rounds: int):
-        stats = MatStats(mode="REW-jax" + ("-spmd" if self.mesh is not None else ""))
+    # -- state lifecycle -----------------------------------------------------
+    def _fresh_state(self, program: Program) -> EngineState:
         cap, D = self.capacity, self.n_shards
-        spo = jnp.zeros(((cap + 1) * D, 3), I32)
-        epoch = jnp.full(((cap + 1) * D,), -1, I32)
-        marked = jnp.zeros(((cap + 1) * D,), bool)
-        n_used = jnp.zeros((D,), I32)
-        rep = jnp.arange(self.n_resources, dtype=I32)
+        return EngineState(
+            spo=jnp.zeros(((cap + 1) * D, 3), I32),
+            epoch=jnp.full(((cap + 1) * D,), -1, I32),
+            marked=jnp.zeros(((cap + 1) * D,), bool),
+            tomb=jnp.full(((cap + 1) * D,), -1, I32),
+            n_used=jnp.zeros((D,), I32),
+            rep=jnp.arange(self.n_resources, dtype=I32),
+            program=program,
+            base_program=program,
+            explicit=np.zeros((0, 3), np.int32),
+            r=0,
+            stats=MatStats(
+                mode="REW-jax" + ("-spmd" if self.mesh is not None else "")
+            ),
+        )
 
-        p_cur = program
-        requeued: list[int] = []
+    def _pad_cands(self, rows: np.ndarray):
+        """Pad a host candidate batch to the global candidate stream shape."""
+        rows = np.asarray(rows, np.int32).reshape(-1, 3)
+        rows_global = self.out_cap * self.n_shards
+        if rows.shape[0] > rows_global:
+            raise CapacityError("out")
+        pad = rows_global - rows.shape[0]
+        cands = jnp.asarray(np.pad(rows, ((0, pad), (0, 0))), I32)
+        cand_valid = jnp.asarray(np.arange(rows_global) < rows.shape[0])
+        return cands, cand_valid
 
-        facts = np.asarray(facts, np.int32).reshape(-1, 3)
-        stats.triples_explicit = facts.shape[0]
-        rows_global = self.out_cap * D
-        if facts.shape[0] > rows_global:
-            raise CapacityError("out_cap")
-        pad = rows_global - facts.shape[0]
-        cands = jnp.asarray(np.pad(facts, ((0, pad), (0, 0))), I32)
-        cand_valid = jnp.asarray(np.arange(rows_global) < facts.shape[0])
+    def _grow_for(self, kind: str) -> None:
+        """Double exactly the capacity a :class:`CapacityError` names.
 
-        r = 0
+        Growing only the exhausted buffer keeps padded join/sort costs
+        proportional to the workload — a bind-table overflow must not
+        quadruple the arena sort.  Every tunable cap is part of the compiled
+        fn cache keys (and jit itself re-traces on array-shape changes), so
+        nothing needs invalidating: fns for the old sizes simply stop being
+        used, and only the fns that bake the grown cap recompile.
+        """
+        if kind == "store":
+            self.capacity *= 2
+        elif kind == "bind":
+            self.bind_cap *= 2
+        elif kind in ("out", "out_cap"):
+            self.out_cap *= 2
+        elif kind == "delta_out":
+            self.delta_out *= 2
+        elif kind == "rewrite":
+            self.rewrite_cap *= 2
+        elif kind == "pair":
+            self.pair_cap *= 2
+        elif kind == "route" and self.route_cap is not None:
+            self.route_cap *= 2
+        else:  # unknown kind: grow everything (defensive)
+            self.capacity *= 2
+            self.bind_cap *= 2
+            self.out_cap *= 2
+            self.delta_out *= 2
+            self.rewrite_cap *= 2
+            self.pair_cap *= 2
+            if self.route_cap is not None:
+                self.route_cap *= 2
+
+    def _bucket_cands(self, bufs):
+        """Concatenate plan output buffers, padding each width group with
+        empty buffers to a power-of-two count — process fns then compile for
+        O(log #plans) distinct candidate widths instead of one per plan
+        subset (the delta-mask filter makes the subset vary round to round,
+        and delta plans emit narrower buffers than full plans)."""
+        groups: dict[int, list] = {}
+        for b in bufs:
+            groups.setdefault(int(b[0].shape[0]), []).append(b)
+        heads, valids = [], []
+        for rows, bs in sorted(groups.items()):
+            total = 1
+            while total < len(bs):
+                total *= 2
+            key = ("padbuf", rows)
+            if key not in self._fns:
+                self._fns[key] = (
+                    jnp.zeros((rows, 3), I32),
+                    jnp.zeros((rows,), bool),
+                )
+            pad_h, pad_v = self._fns[key]
+            heads += [b[0] for b in bs] + [pad_h] * (total - len(bs))
+            valids += [b[1] for b in bs] + [pad_v] * (total - len(bs))
+        return jnp.concatenate(heads, axis=0), jnp.concatenate(valids, axis=0)
+
+    def _grow_state_arena(self, state: EngineState, old_cap: int) -> None:
+        """Re-layout the sharded arena columns after ``capacity`` doubled.
+
+        Each shard's block grows from ``old_cap + 1`` to ``capacity + 1``
+        rows; the old trash slot becomes an ordinary free row (dead, epoch
+        -1) that insertion reuses once ``n_used`` reaches it.
+        """
+        D, new_cap = self.n_shards, self.capacity
+
+        def regrow(x, fill):
+            h = np.asarray(x)
+            h = h.reshape(D, old_cap + 1, *h.shape[1:])
+            pad = [(0, 0)] * h.ndim
+            pad[1] = (0, new_cap - old_cap)
+            h = np.pad(h, pad, constant_values=fill)
+            return jnp.asarray(h.reshape(D * (new_cap + 1), *h.shape[2:]))
+
+        state.spo = regrow(state.spo, 0)
+        state.epoch = regrow(state.epoch, -1)
+        state.marked = regrow(state.marked, False)
+        state.tomb = regrow(state.tomb, -1)
+
+    @staticmethod
+    def _snapshot(state: EngineState) -> dict:
+        import copy
+
+        snap = {f: getattr(state, f) for f in (
+            "spo", "epoch", "marked", "tomb", "n_used", "rep",
+            "program", "explicit", "r",
+        )}
+        snap["stats"] = copy.copy(state.stats)
+        return snap
+
+    @staticmethod
+    def _restore(state: EngineState, snap: dict) -> None:
+        for f, v in snap.items():
+            setattr(state, f, v)
+
+    def _refresh_stats(self, state: EngineState) -> None:
+        stats = state.stats
+        stats.triples_total = int(np.asarray(state.n_used).sum())
+        stats.merged_resources = int(
+            (compress_np(np.asarray(state.rep)) != np.arange(state.n_res)).sum()
+        )
+        stats.triples_explicit = state.explicit.shape[0]
+
+    def state_triples(self, state: EngineState) -> np.ndarray:
+        """The current normal-form store as a host (n, 3) array."""
+        epoch = np.asarray(state.epoch)
+        marked = np.asarray(state.marked)
+        live = (epoch >= 0) & ~marked
+        state.stats.triples_unmarked = int(live.sum())
+        return np.asarray(state.spo)[live]
+
+    def state_rep(self, state: EngineState) -> np.ndarray:
+        return compress_np(np.asarray(state.rep))
+
+    # -- driver --------------------------------------------------------------
+    def _forward(
+        self,
+        state: EngineState,
+        cands,
+        cand_valid,
+        requeued: list[int],
+        max_rounds: int,
+    ) -> None:
+        """The shared bulk-synchronous round loop, resuming from ``state``.
+
+        Used by the base fixpoint (seeded with the explicit facts), additions
+        (seeded with the delta batch) and the delete path's rederive/forward
+        pass (seeded with the rederivation candidates + a requeue of every
+        rule whose head can restore an overdeleted fact).  ``state.r`` keeps
+        increasing across invocations so the epoch discipline is preserved:
+        the first round here inserts at a fresh epoch, and the next round's
+        delta plans match exactly those rows.
+        """
+        stats = state.stats
+        requeued = list(requeued)
+        rounds_here = 0
+        first = True
         have_cands = True
-        while have_cands or requeued:
-            r += 1
+        while first or have_cands or requeued:
+            first = False
+            state.r += 1
+            r = state.r
             stats.rounds += 1
-            if r > max_rounds:
+            rounds_here += 1
+            if rounds_here > max_rounds:
                 raise RuntimeError("did not converge")
             proc = self._get_process_fn(int(cands.shape[0]))
             spo, epoch, marked, n_used, rep_new, flags = proc(
-                spo, epoch, marked, n_used, rep, cands, cand_valid, jnp.asarray(r, I32)
+                state.spo, state.epoch, state.marked, state.n_used, state.rep,
+                cands, cand_valid, jnp.asarray(r, I32),
             )
-            if bool(np.asarray(flags["overflow"]).any()):
-                raise CapacityError("store/rewrite")
+            state.spo, state.epoch, state.marked, state.n_used = (
+                spo, epoch, marked, n_used,
+            )
+            for kind in ("store", "rewrite", "route", "pair"):
+                if bool(np.asarray(flags["ov_" + kind]).any()):
+                    raise CapacityError(kind)
             if bool(np.asarray(flags["contradiction"]).reshape(-1)[0]):
                 from .materialise import Contradiction
 
@@ -584,73 +930,206 @@ class JaxEngine:
             rep_changed = bool(np.asarray(flags["rep_changed"]).reshape(-1)[0])
             if rep_changed:
                 rep_host = compress_np(np.asarray(rep_new))
-                p_new, changed_idx = p_cur.rewrite(rep_host)
+                p_new, changed_idx = state.program.rewrite(rep_host)
                 if changed_idx:
                     stats.rule_rewrites += 1
                     stats.rules_requeued += len(changed_idx)
                     requeued.extend(changed_idx)
-                p_cur = p_new
-            rep = rep_new
+                state.program = p_new
+            state.rep = rep_new
 
-            # evaluate plans for the new delta
+            # evaluate plans for the new delta, skipping plans whose delta
+            # atom is incompatible with the fresh rows' resource masks
             bufs = []
             n_new = int(np.asarray(flags["n_new"]).sum())
             if n_new > 0:
-                for k, rule in enumerate(p_cur.rules):
-                    bufs += self._eval_rule(spo, epoch, marked, r + 1, rule, k, False, stats)
+                delta_masks = np.asarray(flags["fresh_masks"])
+                for k, rule in enumerate(state.program.rules):
+                    bufs += self._eval_rule(
+                        state, r + 1, rule, k, "delta", stats,
+                        delta_masks=delta_masks,
+                    )
             for k in sorted(set(requeued)):
-                bufs += self._eval_rule(spo, epoch, marked, r + 1, p_cur.rules[k], k, True, stats)
+                bufs += self._eval_rule(
+                    state, r + 1, state.program.rules[k], k, "full", stats
+                )
             requeued = []
             if bufs:
-                cands = jnp.concatenate([b[0] for b in bufs], axis=0)
-                cand_valid = jnp.concatenate([b[1] for b in bufs], axis=0)
+                cands, cand_valid = self._bucket_cands(bufs)
+                rows_global = self.out_cap * self.n_shards
+                if int(cands.shape[0]) > rows_global:
+                    sq = self._get_squeeze_fn(int(cands.shape[0]))
+                    cands, cand_valid, sq_ov = sq(cands, cand_valid)
+                    if bool(np.asarray(sq_ov).any()):
+                        raise CapacityError("out")
                 have_cands = bool(cand_valid.any())
             else:
                 have_cands = False
 
-        stats.merged_resources = int(
-            (compress_np(np.asarray(rep)) != np.arange(self.n_resources)).sum()
-        )
-        stats.triples_total = int(np.asarray(n_used).sum())
-        return spo, epoch, marked, rep, p_cur, stats
+    @staticmethod
+    def _atom_may_match(atom, masks: np.ndarray) -> bool:
+        """False iff a constant position of ``atom`` misses the delta masks
+        (so the plan's delta atom cannot bind any fresh/frontier row).  A
+        per-position relaxation of the numpy engine's ``_const_filter`` — a
+        superset of its keep-set, hence sound to skip on False."""
+        for pos, t in enumerate(atom):
+            if not is_var(t) and not masks[pos][t]:
+                return False
+        return True
 
-    def _eval_rule(self, spo, epoch, marked, r, rule: Rule, k: int, full: bool, stats: MatStats):
+    def _eval_rule(
+        self, state: EngineState, r, rule: Rule, k: int, mode: str, stats,
+        delta_masks: np.ndarray | None = None,
+    ):
+        """Evaluate one rule's plans; ``mode`` in {"delta", "full", "tomb"}.
+
+        "tomb" evaluates the overdelete variants (Delta = last tombstone
+        wave, everything else = pre-deletion store) with ``r`` = the wave
+        number; stats are not counted for those (mirroring the host path,
+        which discards overdelete derivation counts).  ``delta_masks``
+        (3, n_res) skips delta/tomb plans whose delta atom cannot match the
+        current delta — skipped plans would contribute nothing (and count
+        nothing: their delta atom matches zero rows).
+        """
         atom_consts = np.zeros((len(rule.body), 3), np.int32)
         for j, atom in enumerate(rule.body):
             for pos, t in enumerate(atom):
                 atom_consts[j, pos] = 0 if is_var(t) else t
         head_consts = np.asarray([0 if is_var(t) else t for t in rule.head], np.int32)
         head_slots = tuple(t if is_var(t) else None for t in rule.head)
-        plans = build_plans(rule, full=full)
+        plans = build_plans(rule, full=(mode == "full"), tombstone=(mode == "tomb"))
+        out_cap = self.out_cap if mode == "full" else self._active_delta_out
         out = []
         for i, plan in enumerate(plans):
+            if (
+                delta_masks is not None
+                and mode in ("delta", "tomb")
+                and not self._atom_may_match(rule.body[i], delta_masks)
+            ):
+                continue
             plan_t = tuple(plan)
-            fn = self._get_plan_fn(("plan", k, i, full, plan_t, head_slots), plan_t, head_slots)
-            heads, valid, n_d, n_a, ov = fn(
-                spo, epoch, marked, jnp.asarray(r, I32),
+            fn = self._get_plan_fn(
+                ("plan", k, i, mode, plan_t, head_slots, self.bind_cap, out_cap),
+                plan_t, head_slots, out_cap,
+            )
+            heads, valid, n_d, n_a, ov_bind, ov_out = fn(
+                state.spo, state.epoch, state.marked, state.tomb,
+                jnp.asarray(r, I32),
                 jnp.asarray(atom_consts), jnp.asarray(head_consts),
             )
-            if bool(np.asarray(ov).any()):
-                raise CapacityError("bind/out")
-            stats.derivations += int(np.asarray(n_d).sum())
-            stats.rule_applications += int(np.asarray(n_a).sum())
+            if bool(np.asarray(ov_bind).any()):
+                raise CapacityError("bind")
+            if bool(np.asarray(ov_out).any()):
+                raise CapacityError(
+                    "out" if out_cap == self.out_cap else "delta_out"
+                )
+            if stats is not None:
+                stats.derivations += int(np.asarray(n_d).sum())
+                stats.rule_applications += int(np.asarray(n_a).sum())
             out.append((heads, valid))
         return out
 
+    # -- public API ----------------------------------------------------------
+    def materialise_state(
+        self, facts, program: Program, max_rounds: int = 10_000
+    ) -> EngineState:
+        """Base REW fixpoint returning a maintainable device-resident state."""
+        import time
+
+        t0 = time.perf_counter()
+        facts = np.asarray(facts, np.int32).reshape(-1, 3)
+        while True:
+            try:
+                # the base run's early deltas are dataset-sized: delta plans
+                # use the full out_cap here, the narrow delta_out on updates
+                self._active_delta_out = self.out_cap
+                with enable_x64():
+                    state = self._fresh_state(program)
+                    state.stats.triples_explicit = facts.shape[0]
+                    cands, cand_valid = self._pad_cands(facts)
+                    self._forward(state, cands, cand_valid, [], max_rounds)
+                break
+            except CapacityError as e:
+                self._grow_for(str(e))
+        from .triples import dedup_rows
+
+        state.explicit = dedup_rows(facts)
+        self._refresh_stats(state)
+        state.stats.wall_seconds += time.perf_counter() - t0
+        return state
+
+    def add_facts(
+        self, state: EngineState, delta, max_rounds: int = 10_000, retry: bool = True
+    ) -> EngineState:
+        """Add explicit triples and maintain the store on the accelerator."""
+        return self._apply_update(state, "add", delta, max_rounds, retry)
+
+    def delete_facts(
+        self, state: EngineState, delta, max_rounds: int = 10_000, retry: bool = True
+    ) -> EngineState:
+        """Retract explicit triples via the sharded overdelete/rederive pass."""
+        return self._apply_update(state, "delete", delta, max_rounds, retry)
+
+    def _apply_update(self, state, op, delta, max_rounds, retry):
+        import time
+
+        from .incremental_spmd import spmd_add_facts, spmd_delete_facts
+
+        t0 = time.perf_counter()
+        while True:
+            snap = self._snapshot(state)
+            try:
+                self._active_delta_out = self.delta_out
+                with enable_x64():
+                    if op == "add":
+                        spmd_add_facts(self, state, delta, max_rounds)
+                    else:
+                        spmd_delete_facts(self, state, delta, max_rounds)
+                break
+            except CapacityError as e:
+                if not retry:
+                    raise
+                self._restore(state, snap)
+                old_cap = self.capacity
+                self._grow_for(str(e))
+                if self.capacity != old_cap:
+                    self._grow_state_arena(state, old_cap)
+        self._refresh_stats(state)
+        state.stats.wall_seconds += time.perf_counter() - t0
+        return state
+
     def materialise_incremental(
-        self, facts, program: Program, updates, max_rounds: int = 10_000
+        self,
+        facts,
+        program: Program,
+        updates,
+        max_rounds: int = 10_000,
+        on_device: bool = True,
     ):
         """Base REW materialisation on the accelerator, then maintain the
         result through an update stream without re-running from scratch.
 
         ``updates`` is an iterable of ``("add" | "delete", delta)`` pairs
         (each delta an (n, 3) int array of explicit triples, original IDs).
-        The base fixpoint — the expensive part — runs on this engine; the
-        maintenance passes run on the host subsystem
-        (:mod:`repro.core.incremental`), which shares the rho/arena/rule
-        machinery and is oracle-equal to a from-scratch run.  Returns
+        By default both the base fixpoint and the maintenance rounds run on
+        this engine (:mod:`repro.core.incremental_spmd`: epoch-tagged
+        tombstones + owner-routed delta exchange).  ``on_device=False``
+        replays the updates through the host subsystem
+        (:mod:`repro.core.incremental`) instead — the reference oracle and
+        the baseline bench_incremental compares against.  Returns
         ``(spo, rep, stats)`` like :meth:`materialise`.
         """
+        if on_device:
+            state = self.materialise_state(facts, program, max_rounds)
+            for op, delta in updates:
+                if op == "add":
+                    self.add_facts(state, delta, max_rounds)
+                elif op in ("delete", "del"):
+                    self.delete_facts(state, delta, max_rounds)
+                else:
+                    raise ValueError(f"unknown update op {op!r}")
+            return self.state_triples(state), self.state_rep(state), state.stats
+
         from .incremental import IncrementalState, add_facts, delete_facts
         from .triples import TripleArena, dedup_rows
 
@@ -658,7 +1137,7 @@ class JaxEngine:
         arena = TripleArena()
         arena.add_batch(spo)
         p_cur, _ = program.rewrite(rep)
-        state = IncrementalState(
+        host_state = IncrementalState(
             arena=arena,
             rep=rep.astype(np.int32),
             program=p_cur,
@@ -669,39 +1148,16 @@ class JaxEngine:
         )
         for op, delta in updates:
             if op == "add":
-                add_facts(state, delta, max_rounds)
+                add_facts(host_state, delta, max_rounds)
             elif op in ("delete", "del"):
-                delete_facts(state, delta, max_rounds)
+                delete_facts(host_state, delta, max_rounds)
             else:
                 raise ValueError(f"unknown update op {op!r}")
-        state.result()  # refresh triple/memory counters on stats
-        return state.triples(), state.rep, state.stats
+        host_state.result()  # refresh triple/memory counters on stats
+        return host_state.triples(), host_state.rep, host_state.stats
 
     def materialise(self, facts, program: Program, max_rounds: int = 10_000):
         """REW materialisation with automatic capacity growth."""
-        import time
-
-        t0 = time.perf_counter()
-        while True:
-            try:
-                with enable_x64():
-                    spo, epoch, marked, rep, p_cur, stats = self._run(
-                        facts, program, max_rounds
-                    )
-                break
-            except CapacityError:
-                self.capacity *= 2
-                self.bind_cap *= 2
-                self.out_cap *= 2
-                self.rewrite_cap *= 2
-                if self.route_cap is not None:
-                    self.route_cap *= 2
-                self._fns.clear()
-        stats.wall_seconds = time.perf_counter() - t0
-        spo_h = np.asarray(spo)
-        epoch_h = np.asarray(epoch)
-        marked_h = np.asarray(marked)
-        live = (epoch_h >= 0) & ~marked_h
-        stats.triples_unmarked = int(live.sum())
-        rep_h = compress_np(np.asarray(rep))
-        return spo_h[live], rep_h, stats
+        state = self.materialise_state(facts, program, max_rounds)
+        spo = self.state_triples(state)
+        return spo, self.state_rep(state), state.stats

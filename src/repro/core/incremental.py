@@ -72,8 +72,8 @@ from .rules import Program, Rule
 from .seminaive import _const_filter, eval_rule_delta, eval_rule_full
 from .stats import MatStats
 from .terms import SAME_AS, is_var
-from .triples import TripleArena, dedup_rows, pack
-from .uf import clique_members, clique_sizes, compress_np
+from .triples import TripleArena, dedup_rows, pack, setdiff_rows
+from .uf import clique_sizes, split_cliques
 
 __all__ = [
     "IncrementalState",
@@ -101,13 +101,6 @@ def normal_forms(
         )
         return np.asarray(out, dtype=np.int32)
     return rep[spo].astype(np.int32)
-
-
-def _setdiff_rows(a: np.ndarray, b: np.ndarray) -> np.ndarray:
-    """Rows of ``a`` whose packed key is not in ``b`` (both (n, 3))."""
-    if a.shape[0] == 0 or b.shape[0] == 0:
-        return a
-    return a[~np.isin(pack(a), pack(b))]
 
 
 @dataclass
@@ -192,7 +185,7 @@ def add_facts(
     """
     t0 = time.perf_counter()
     delta = dedup_rows(delta)
-    delta = _setdiff_rows(delta, state.explicit)
+    delta = setdiff_rows(delta, state.explicit)
     if delta.shape[0] == 0:
         state.stats.wall_seconds += time.perf_counter() - t0
         return state
@@ -209,20 +202,6 @@ def add_facts(
 # ---------------------------------------------------------------------------
 # deletion: B/F-style overdelete + clique split + rederive
 # ---------------------------------------------------------------------------
-
-def _rows_matching(arena: TripleArena, facts: np.ndarray) -> np.ndarray:
-    """Arena row indices of *valid* rows whose triple is in ``facts``."""
-    if facts.shape[0] == 0:
-        return np.zeros(0, dtype=np.int64)
-    keys, rows = arena.index()
-    if keys.shape[0] == 0:
-        return np.zeros(0, dtype=np.int64)
-    cand = np.unique(pack(facts))
-    pos = np.searchsorted(keys, cand)
-    pos = np.clip(pos, 0, keys.shape[0] - 1)
-    hit = keys[pos] == cand
-    return rows[pos[hit]]
-
 
 def _rule_touches(rule: Rule, f_spo: np.ndarray) -> bool:
     """True iff some frontier fact matches some body atom's constant
@@ -273,9 +252,7 @@ def _overdelete(
     sizes = clique_sizes(rep)
 
     # seed: normal forms of the deleted explicit triples
-    frontier = _rows_matching(
-        arena, normal_forms(deleted, rep, state.use_kernel)
-    )
+    frontier = arena.rows_of(normal_forms(deleted, rep, state.use_kernel))
     overdel[frontier] = True
 
     while frontier.shape[0]:
@@ -296,7 +273,7 @@ def _overdelete(
         )
         heads = normal_forms(heads, rep, state.use_kernel)
 
-        new_rows = _rows_matching(arena, heads)
+        new_rows = arena.rows_of(heads)
         new_rows = new_rows[~overdel[new_rows]]
 
         # 2) reflexivity children: <c, sameAs, c> for every resource of this
@@ -305,7 +282,7 @@ def _overdelete(
         refl = np.stack(
             [res, np.full_like(res, SAME_AS), res], axis=1
         ).astype(np.int32)
-        refl_rows = _rows_matching(arena, refl)
+        refl_rows = arena.rows_of(refl)
         refl_rows = refl_rows[~overdel[refl_rows]]
         new_rows = np.concatenate([new_rows, refl_rows])
 
@@ -334,26 +311,6 @@ def _overdelete(
     return np.flatnonzero(overdel), np.flatnonzero(suspect)
 
 
-def _split_cliques(rep: np.ndarray, suspect_reps: np.ndarray) -> np.ndarray:
-    """Reset every member of the suspect cliques to a singleton.
-
-    The inverse of min-hooking: members (including the representative
-    itself) become their own roots, and the forward pass re-merges whatever
-    equalities the surviving facts still support via
-    :func:`repro.core.uf.merge_pairs_np` — only the affected connected
-    components are ever recomputed.
-    """
-    if suspect_reps.shape[0] == 0:
-        return rep
-    rep = rep.copy()
-    members = clique_members(rep)
-    for r in suspect_reps:
-        mem = members.get(int(r))
-        if mem is not None:
-            rep[mem] = mem.astype(rep.dtype)
-    return compress_np(rep)
-
-
 def delete_facts(
     state: IncrementalState, delta: np.ndarray, max_rounds: int = 10_000
 ) -> IncrementalState:
@@ -373,14 +330,14 @@ def delete_facts(
         state.stats.wall_seconds += time.perf_counter() - t0
         return state
 
-    explicit_new = _setdiff_rows(state.explicit, delta)
+    explicit_new = setdiff_rows(state.explicit, delta)
 
     # -- backward: overdelete + find suspect cliques -------------------------
     overdel_rows, suspect_reps = _overdelete(state, delta)
     state.arena.mark_rows(overdel_rows)
 
     # -- split: only affected connected components are recomputed ------------
-    rep_split = _split_cliques(state.rep, suspect_reps)
+    rep_split = split_cliques(state.rep, suspect_reps)
 
     # -- rebuild rules under the split rho (suspect constants revert) --------
     p_split, _changed = state.base_program.rewrite(rep_split)

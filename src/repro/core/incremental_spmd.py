@@ -1,0 +1,494 @@
+"""Sharded incremental maintenance: SPMD overdelete/rederive on the engine.
+
+The host subsystem (:mod:`repro.core.incremental`) runs every maintenance
+round on the host, so update streams do not scale with the mesh the way the
+base fixpoint in :meth:`repro.core.engine_jax.JaxEngine.materialise` does.
+This module ports the add/delete rounds into the fixed-capacity SPMD engine:
+
+**Additions** reuse the engine's forward round loop directly — the delta
+batch is padded into the candidate stream and processed exactly like the
+explicit facts of the base run, at the next epoch.  The epoch discipline of
+``_epoch_ok`` makes the loop restartable: the first new round's delta plans
+match exactly the freshly inserted rows, and old-only substitutions were
+exhausted earlier.
+
+**Deletions** are the DRed-style backward/forward pass of the host module,
+with the backward closure run on-device as *epoch-tagged tombstones*:
+
+1. *Seed*: the rho-normal forms of the deleted explicit triples are routed
+   to every shard (replicated query batch); each shard tags its matching
+   rows ``tomb = 0``.
+2. *Overdelete waves*: wave ``w`` evaluates every rule's tombstone plans
+   (:func:`repro.core.engine_jax.build_plans` with ``tombstone=True``) —
+   Delta = rows with ``tomb == w-1``, all other atoms the full pre-deletion
+   store — then :func:`_od_step` tags the derived heads, the reflexivity
+   children of the wave's frontier, and every fact touching a freshly
+   *suspect* clique (one whose reflexive witness ``<r, sameAs, r>`` was
+   tombstoned).  Cross-shard delta triples are exchanged with the same
+   owner-routed ``all_to_all`` (keyed on the subject representative) the
+   forward rounds use; the suspect set leaves the device only as a psum'd
+   boolean mask — clique split/re-merge stays a host decision.
+3. *Finalize*: tombstones flip to ``marked`` (the paper's mark-don't-delete
+   bit), per-position masks of the overdeleted normal forms are reduced for
+   the host-side rederive rule filter, and ``tomb`` resets to -1 — the
+   invariant the forward predicates rely on.
+4. *Split + rederive*: the host splits suspect cliques
+   (:func:`repro.core.uf.split_cliques` — only rho bookkeeping leaves the
+   device), re-rewrites the base program under the split rho, and seeds the
+   shared forward loop with (a) still-explicit triples whose normal form
+   went missing and (b) missing reflexive witnesses of surviving resources,
+   while requeueing for full re-evaluation every rule whose head pattern can
+   restore an overdeleted fact.  Re-merging then happens through the normal
+   round machinery (``merge_pairs_jax`` + the Algorithm-3 sweep).
+
+Correctness oracle (tests/test_incremental_spmd.py + the differential fuzz
+harness in tests/test_incremental.py): after any update sequence the state
+equals the from-scratch REW materialisation of the updated explicit set —
+same rho, same normal-form store — and is invariant to the device count.
+"""
+
+from __future__ import annotations
+
+from functools import partial
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from .engine_jax import (
+    I32,
+    KEY_MAX,
+    CapacityError,
+    EngineState,
+    _compact as _engine_compact,
+    _pack3,
+    _route_rows,
+)
+from .terms import SAME_AS, is_var
+from .triples import dedup_rows, pack, setdiff_rows
+from .uf import clique_sizes, split_cliques
+
+__all__ = ["spmd_add_facts", "spmd_delete_facts"]
+
+
+# ---------------------------------------------------------------------------
+# per-shard step functions (pure; run under shard_map via engine._wrap)
+# ---------------------------------------------------------------------------
+
+def _match_local(spo, select, queries, qvalid):
+    """Row index of each query triple among the locally ``select``-ed rows.
+
+    Returns ``(rows, hit)`` — rows are clamped-garbage where ``hit`` is
+    False.  Selected rows are unique by the arena's insert-time dedup, so at
+    most one row matches a query.
+    """
+    skeys = jnp.where(select, _pack3(spo), KEY_MAX)
+    order = jnp.argsort(skeys)
+    sk = skeys[order]
+    qk = jnp.where(qvalid, _pack3(queries), KEY_MAX - 1)
+    pos = jnp.clip(jnp.searchsorted(sk, qk), 0, sk.shape[0] - 1)
+    hit = sk[pos] == qk
+    return order[pos], hit
+
+
+def _psum_bool(x, axis):
+    if axis is None:
+        return x
+    return jax.lax.psum(x.astype(I32), axis) > 0
+
+
+def _seed_tombs(spo, epoch, marked, tomb, q, qv, *, axis):
+    """Tag wave-0 tombstones: local rows matching the replicated queries."""
+    untagged = (epoch >= 0) & ~marked & (tomb < 0)
+    rows, hit = _match_local(spo, untagged, q, qv)
+    tgt = jnp.where(hit, rows, tomb.shape[0])
+    tomb = tomb.at[tgt].set(jnp.zeros(tgt.shape, I32), mode="drop")
+    n = hit.sum().astype(I32)
+    if axis is not None:
+        n = jax.lax.psum(n, axis)
+    return tomb, n[None]
+
+
+def _od_step(
+    spo, epoch, marked, tomb, rep, sizes, suspect, heads, hv, w,
+    *, axis, n_shards, route_cap, refl_cap,
+):
+    """One overdelete wave: tag heads + reflexivity children, detect suspect
+    cliques (psum'd mask — the only state that leaves the shard), and grab
+    every live fact touching a fresh suspect.  Returns
+    ``(tomb', suspect', n_new, overflow, frontier_masks)``.
+    """
+    C = spo.shape[0]
+    store = (epoch >= 0) & ~marked  # the pre-deletion store (DRed's T)
+    frontier = store & (tomb == w - 1)
+
+    # heads derived from the wave's delta plans, normalised under rho
+    heads_n = jnp.where(hv[:, None], rep[heads], 0).astype(I32)
+
+    # reflexivity children: <c, sameAs, c> for every resource of the
+    # frontier (plus the sameAs row itself, mirroring the host pass).  The
+    # frontier is compacted first so the stream scales with the wave, not
+    # the arena; overflow raises the update's capacity retry.
+    fcols, fvalid, f_ov = _engine_compact(
+        {"s": spo[:, 0], "p": spo[:, 1], "o": spo[:, 2]}, frontier, refl_cap
+    )
+    f_spo = jnp.stack([fcols["s"], fcols["p"], fcols["o"]], axis=1)
+    res = f_spo.reshape(-1)
+    res_v = jnp.repeat(fvalid, 3)
+    refl = jnp.stack([res, jnp.full_like(res, SAME_AS), res], axis=1)
+    sa_row = jnp.asarray([[SAME_AS] * 3], I32)
+    any_f = frontier.any()
+    stream = jnp.concatenate([heads_n, refl, sa_row], axis=0)
+    sv = jnp.concatenate([hv, res_v, any_f[None]])
+
+    # dedup locally before the exchange (shrinks bucket pressure)
+    keys = jnp.where(sv, _pack3(stream), KEY_MAX)
+    order = jnp.argsort(keys)
+    sk = keys[order]
+    uniq = jnp.concatenate([jnp.asarray([True]), sk[1:] != sk[:-1]])
+    stream, sv = stream[order], uniq & (sk < KEY_MAX)
+
+    # owner-routed delta exchange, keyed on the subject representative
+    stream, _, sv, overflow = _route_rows(
+        stream, None, sv, axis, n_shards, route_cap
+    )
+
+    # tombstone the matching local rows that are not already tagged
+    untagged = store & (tomb < 0)
+    rows, hit = _match_local(spo, untagged, stream, sv)
+    tgt = jnp.where(hit, rows, C)
+    tomb = tomb.at[tgt].set(jnp.where(hit, w, 0).astype(I32), mode="drop")
+
+    # suspect cliques: a tombstoned reflexive witness <r, sameAs, r> of a
+    # multi-member clique means every merge of that clique lost its proof.
+    # Checked on this wave's new rows AND the frontier so the wave-0 seeds
+    # are examined exactly once (grabbed rows are re-checked next wave).
+    wit = store & ((tomb == w) | (tomb == w - 1))
+    is_wit = (
+        wit
+        & (spo[:, 1] == SAME_AS)
+        & (spo[:, 0] == spo[:, 2])
+        & (sizes[spo[:, 0]] > 1)
+    )
+    cand = jnp.zeros(rep.shape[0], bool).at[
+        jnp.where(is_wit, spo[:, 0], 0)
+    ].max(is_wit)
+    cand = _psum_bool(cand, axis)
+    fresh = cand & ~suspect
+    suspect = suspect | cand
+
+    # grab: a stored normal form conflates members of a split clique, so
+    # every live fact touching a fresh suspect must be rederived
+    touch = fresh[spo[:, 0]] | fresh[spo[:, 1]] | fresh[spo[:, 2]]
+    grab = store & (tomb < 0) & touch
+    tomb = jnp.where(grab, w, tomb)
+
+    new = store & (tomb == w)
+    n_new = new.sum().astype(I32)
+    if axis is not None:
+        n_new = jax.lax.psum(n_new, axis)
+
+    # per-position resource masks of the wave's new rows: the host driver
+    # skips next wave's tombstone plans whose delta atom cannot match them
+    fm = []
+    for pos in range(3):
+        fm.append(
+            jnp.zeros(rep.shape[0], bool).at[
+                jnp.where(new, spo[:, pos], 0)
+            ].max(new)
+        )
+    od_masks = _psum_bool(jnp.stack(fm), axis)
+    return tomb, suspect, n_new[None], overflow[None], f_ov[None], od_masks
+
+
+def _finalize_tombs(spo, epoch, marked, tomb, rep, *, axis):
+    """Flip tombstones into the paper's outdated bit and reduce the
+    per-position masks of overdeleted normal forms (the host-side rederive
+    rule filter).  Restores the ``tomb == -1`` forward invariant."""
+    tombed = tomb >= 0
+    masks = []
+    for pos in range(3):
+        m = jnp.zeros(rep.shape[0], bool).at[
+            jnp.where(tombed, spo[:, pos], 0)
+        ].max(tombed)
+        masks.append(m)
+    od_mask = jnp.stack(masks)  # (3, n_res)
+    od_mask = _psum_bool(od_mask, axis)
+    n_od = tombed.sum().astype(I32)
+    if axis is not None:
+        n_od = jax.lax.psum(n_od, axis)
+    marked = marked | tombed
+    tomb = jnp.full_like(tomb, -1)
+    return marked, tomb, od_mask, n_od[None]
+
+
+def _member(spo, epoch, marked, q, qv, *, axis):
+    """Replicated membership of query triples among live store rows."""
+    live = (epoch >= 0) & ~marked
+    _rows, hit = _match_local(spo, live, q, qv)
+    return _psum_bool(hit, axis)
+
+
+def _occupancy(spo, epoch, marked, rep, *, axis):
+    """Replicated mask of resources occurring in live store rows."""
+    live = (epoch >= 0) & ~marked
+    res = spo.reshape(-1)
+    lv = jnp.repeat(live, 3)
+    occ = jnp.zeros(rep.shape[0], bool).at[jnp.where(lv, res, 0)].max(lv)
+    return _psum_bool(occ, axis)
+
+
+# ---------------------------------------------------------------------------
+# wrapped-fn getters (cached on the engine like its plan/process fns)
+# ---------------------------------------------------------------------------
+
+def _get_step_fn(engine, name, fn, in_specs, out_specs, **static):
+    key = (name,) + tuple(sorted(static.items()))
+    if key not in engine._fns:
+        a = engine.axis
+        engine._fns[key] = engine._wrap(
+            partial(fn, axis=a, **static), in_specs=in_specs, out_specs=out_specs
+        )
+    return engine._fns[key]
+
+
+def _specs(engine):
+    a = engine.axis
+    d = P(a) if a else None
+    rpl = P() if a else None
+    return d, rpl
+
+
+def _seed_fn(engine):
+    d, rpl = _specs(engine)
+    return _get_step_fn(
+        engine, "seed_tombs", _seed_tombs,
+        in_specs=(d, d, d, d, rpl, rpl), out_specs=(d, rpl),
+    )
+
+
+def _od_fn(engine, n_heads: int):
+    d, rpl = _specs(engine)
+    route_cap = engine.route_cap if engine.axis is not None else None
+    return _get_step_fn(
+        engine, ("od", n_heads), _od_step,
+        in_specs=(d, d, d, d, rpl, rpl, rpl, d, d, rpl),
+        out_specs=(d, rpl, rpl, d, d, rpl),
+        n_shards=engine.n_shards, route_cap=route_cap,
+        refl_cap=engine._active_delta_out,
+    )
+
+
+def _finalize_fn(engine):
+    d, rpl = _specs(engine)
+    return _get_step_fn(
+        engine, "finalize_tombs", _finalize_tombs,
+        in_specs=(d, d, d, d, rpl), out_specs=(d, d, rpl, rpl),
+    )
+
+
+def _member_fn(engine):
+    d, rpl = _specs(engine)
+    return _get_step_fn(
+        engine, "member", _member,
+        in_specs=(d, d, d, rpl, rpl), out_specs=rpl,
+    )
+
+
+def _occ_fn(engine):
+    d, rpl = _specs(engine)
+    return _get_step_fn(
+        engine, "occupancy", _occupancy,
+        in_specs=(d, d, d, rpl), out_specs=rpl,
+    )
+
+
+# ---------------------------------------------------------------------------
+# host-side helpers
+# ---------------------------------------------------------------------------
+
+def _chunks(rows: np.ndarray, size: int):
+    for i in range(0, rows.shape[0], size):
+        chunk = rows[i : i + size]
+        padn = size - chunk.shape[0]
+        q = np.pad(chunk, ((0, padn), (0, 0))).astype(np.int32)
+        qv = np.arange(size) < chunk.shape[0]
+        yield chunk.shape[0], jnp.asarray(q), jnp.asarray(qv)
+
+
+def _seed_query(engine, state: EngineState, rows: np.ndarray) -> int:
+    """Tag wave-0 tombstones for ``rows`` (chunked replicated queries)."""
+    total = 0
+    fn = _seed_fn(engine)
+    for _n, q, qv in _chunks(rows, engine.seed_chunk):
+        state.tomb, n = fn(state.spo, state.epoch, state.marked, state.tomb, q, qv)
+        total += int(np.asarray(n).reshape(-1)[0])
+    return total
+
+
+def _member_query(engine, state: EngineState, rows: np.ndarray) -> np.ndarray:
+    """Boolean membership of ``rows`` among live store rows (chunked)."""
+    if rows.shape[0] == 0:
+        return np.zeros(0, dtype=bool)
+    fn = _member_fn(engine)
+    out = []
+    for n, q, qv in _chunks(rows, engine.seed_chunk):
+        hit = np.asarray(fn(state.spo, state.epoch, state.marked, q, qv))
+        out.append(hit[:n])
+    return np.concatenate(out)
+
+
+def _tomb_heads(engine, state: EngineState, w: int, masks: np.ndarray):
+    """Evaluate the tombstone delta plans for wave ``w``, skipping plans
+    whose delta atom cannot match the frontier (``masks`` = the previous
+    wave's per-position resource masks)."""
+    bufs = []
+    for k, rule in enumerate(state.program.rules):
+        bufs += engine._eval_rule(state, w, rule, k, "tomb", None, delta_masks=masks)
+    if not bufs:
+        return jnp.zeros((0, 3), I32), jnp.zeros((0,), bool)
+    return engine._bucket_cands(bufs)
+
+
+def _head_may_rederive(rule, od_mask: np.ndarray, rep_old: np.ndarray) -> bool:
+    """False iff no overdeleted fact can match the rule's head pattern.
+
+    Per-position relaxation of the host filter (a superset, hence sound):
+    head constants are collapsed through the *pre-deletion* rho because the
+    overdelete masks were reduced over pre-split normal forms while the rule
+    was rewritten under the post-split rho.
+    """
+    for pos, t in enumerate(rule.head):
+        if not is_var(t) and not od_mask[pos][rep_old[t]]:
+            return False
+    return True
+
+
+# ---------------------------------------------------------------------------
+# drivers (called by JaxEngine.add_facts / delete_facts inside enable_x64)
+# ---------------------------------------------------------------------------
+
+def spmd_add_facts(engine, state: EngineState, delta, max_rounds: int) -> EngineState:
+    """Additions: seed the engine's forward loop with the fresh triples."""
+    delta = dedup_rows(delta)
+    delta = setdiff_rows(delta, state.explicit)
+    if delta.shape[0] == 0:
+        return state
+    hi = int(delta.max()) + 1
+    if hi > state.n_res:  # unseen resource IDs: extend rho with identities
+        rep_host = np.asarray(state.rep)
+        ext = np.arange(rep_host.shape[0], hi, dtype=rep_host.dtype)
+        state.rep = jnp.asarray(np.concatenate([rep_host, ext]))
+    state.explicit = np.concatenate([state.explicit, delta], axis=0)
+    state.stats.triples_explicit = state.explicit.shape[0]
+    cands, cand_valid = engine._pad_cands(delta)
+    engine._forward(state, cands, cand_valid, [], max_rounds)
+    return state
+
+
+def spmd_delete_facts(engine, state: EngineState, delta, max_rounds: int) -> EngineState:
+    """Deletions: tombstone waves on-device, split on host, rederive on-device."""
+    delta = dedup_rows(delta)
+    if delta.shape[0] and state.explicit.shape[0]:
+        delta = delta[np.isin(pack(delta), pack(state.explicit))]
+    else:
+        delta = np.zeros((0, 3), np.int32)
+    if delta.shape[0] == 0:
+        return state
+
+    explicit_new = setdiff_rows(state.explicit, delta)
+    rep_host = np.asarray(state.rep)
+    sizes = clique_sizes(rep_host)
+
+    # -- backward: seed + overdelete waves (epoch-tagged tombstones) ---------
+    if engine.use_kernel:
+        from repro.kernels.rewrite_triples import rewrite_owner
+
+        nf_j, owner_j = rewrite_owner(
+            jnp.asarray(delta, jnp.int32),
+            jnp.asarray(rep_host, jnp.int32),
+            engine.n_shards,
+        )
+        nf, owner = np.asarray(nf_j), np.asarray(owner_j)
+    else:
+        nf = rep_host[delta].astype(np.int32)
+        owner = nf[:, 0] % engine.n_shards
+    # owner-sorted queries: each shard's matches land in contiguous runs
+    nf = dedup_rows(nf[np.argsort(owner, kind="stable")])
+    _seed_query(engine, state, nf)
+
+    # wave-1 frontier masks come from the seed normal forms themselves
+    masks = np.zeros((3, state.n_res), dtype=bool)
+    for pos in range(3):
+        masks[pos][nf[:, pos]] = True
+
+    suspect = jnp.zeros((state.n_res,), bool)
+    sizes_j = jnp.asarray(sizes, dtype=I32)
+    w = 0
+    while True:
+        w += 1
+        state.stats.od_waves += 1
+        heads, hv = _tomb_heads(engine, state, w, masks)
+        fn = _od_fn(engine, int(heads.shape[0]))
+        state.tomb, suspect, n_new, ov_route, ov_refl, od_masks = fn(
+            state.spo, state.epoch, state.marked, state.tomb,
+            state.rep, sizes_j, suspect, heads, hv, jnp.asarray(w, I32),
+        )
+        if bool(np.asarray(ov_route).any()):
+            raise CapacityError("route")
+        if bool(np.asarray(ov_refl).any()):
+            raise CapacityError("delta_out")
+        if int(np.asarray(n_new).reshape(-1)[0]) == 0:
+            break
+        masks = np.asarray(od_masks)
+
+    state.marked, state.tomb, od_mask, n_od = _finalize_fn(engine)(
+        state.spo, state.epoch, state.marked, state.tomb, state.rep
+    )
+    n_od = int(np.asarray(n_od).reshape(-1)[0])
+    state.stats.overdeleted += n_od
+
+    # -- split: suspect cliques revert to singletons (host rho bookkeeping) --
+    suspect_reps = np.flatnonzero(np.asarray(suspect))
+    state.stats.suspects_split += int(suspect_reps.shape[0])
+    rep_split = split_cliques(rep_host, suspect_reps)
+    p_split, _ = state.base_program.rewrite(rep_split)
+    state.rep = jnp.asarray(rep_split.astype(np.int32))
+    state.program = p_split
+
+    # -- rederive: requeue rules that can restore an overdeleted fact --------
+    od_mask_h = np.asarray(od_mask)
+    requeued = []
+    if n_od:
+        for k, rule in enumerate(p_split.rules):
+            if _head_may_rederive(rule, od_mask_h, rep_host):
+                requeued.append(k)
+
+    # seeds: explicit rows whose (post-split) normal form went missing, and
+    # missing reflexive witnesses of resources surviving in the store
+    seeds = []
+    if explicit_new.shape[0]:
+        nf_exp = rep_split[explicit_new].astype(np.int32)
+        miss = ~_member_query(engine, state, nf_exp)
+        if miss.any():
+            seeds.append(explicit_new[miss])
+    occ = np.asarray(_occ_fn(engine)(state.spo, state.epoch, state.marked, state.rep))
+    if occ.any() and n_od:
+        res = np.union1d(np.flatnonzero(occ), [SAME_AS]).astype(np.int32)
+        refl = np.stack([res, np.full_like(res, SAME_AS), res], axis=1)
+        miss_refl = refl[~_member_query(engine, state, refl)]
+        if miss_refl.shape[0]:
+            seeds.append(miss_refl)
+    cands = (
+        dedup_rows(np.concatenate(seeds, axis=0))
+        if seeds
+        else np.zeros((0, 3), np.int32)
+    )
+
+    state.explicit = explicit_new
+    state.stats.triples_explicit = explicit_new.shape[0]
+    cj, cv = engine._pad_cands(cands)
+    engine._forward(state, cj, cv, requeued, max_rounds)
+    return state

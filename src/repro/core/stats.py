@@ -25,6 +25,9 @@ class MatStats:
     rounds: int = 0
     rule_rewrites: int = 0          # how many times P' := rho(P) changed P'
     rules_requeued: int = 0         # rules placed on the R queue analogue
+    od_waves: int = 0               # overdelete waves (incremental deletes)
+    overdeleted: int = 0            # rows tombstoned across deletes
+    suspects_split: int = 0         # sameAs cliques split + re-merged
     triples_total: int = 0          # arena rows used (marked + unmarked)
     triples_unmarked: int = 0
     triples_explicit: int = 0

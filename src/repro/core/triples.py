@@ -32,12 +32,35 @@ def dedup_rows(spo: np.ndarray) -> np.ndarray:
     return spo[np.sort(idx)]
 
 
+def setdiff_rows(a: np.ndarray, b: np.ndarray) -> np.ndarray:
+    """Rows of ``a`` whose packed key is not in ``b`` (both (n, 3))."""
+    if a.shape[0] == 0 or b.shape[0] == 0:
+        return a
+    return a[~np.isin(pack(a), pack(b))]
+
+
 def unpack(keys: np.ndarray) -> np.ndarray:
     mask = (1 << 21) - 1
     s = (keys >> _SHIFT_S) & mask
     p = (keys >> _SHIFT_P) & mask
     o = keys & mask
     return np.stack([s, p, o], axis=1).astype(np.int32)
+
+
+def apply_op(explicit: np.ndarray, op: str, delta: np.ndarray) -> np.ndarray:
+    """Apply an ``("add" | "delete", delta)`` event to an explicit fact set.
+
+    Packed-set algebra returning the sorted distinct explicit set a
+    from-scratch run would start from — the oracle-side bookkeeping shared
+    by the incremental tests and bench_incremental.
+    """
+    explicit = np.asarray(explicit, np.int32).reshape(-1, 3)
+    delta = np.asarray(delta, np.int32).reshape(-1, 3)
+    cur = set(pack(explicit).tolist())
+    d = set(pack(delta).tolist())
+    cur = (cur | d) if op == "add" else (cur - d)
+    keys = np.asarray(sorted(cur), dtype=np.int64)
+    return unpack(keys) if keys.shape[0] else np.zeros((0, 3), np.int32)
 
 
 class TripleArena:
@@ -130,6 +153,19 @@ class TripleArena:
                 self._keys = np.delete(self._keys, pos)
                 self._rows = np.delete(self._rows, pos)
         self.valid[rows] = False
+
+    def rows_of(self, facts: np.ndarray) -> np.ndarray:
+        """Arena row indices of *valid* rows whose triple is in ``facts``."""
+        if facts.shape[0] == 0:
+            return np.zeros(0, dtype=np.int64)
+        keys, rows = self.index()
+        if keys.shape[0] == 0:
+            return np.zeros(0, dtype=np.int64)
+        cand = np.unique(pack(facts))
+        pos = np.searchsorted(keys, cand)
+        pos = np.clip(pos, 0, keys.shape[0] - 1)
+        hit = keys[pos] == cand
+        return rows[pos[hit]]
 
     def valid_triples(self) -> np.ndarray:
         return self.spo[: self.n][self.valid[: self.n]]

@@ -127,6 +127,26 @@ def clique_sizes(rep: np.ndarray) -> np.ndarray:
     return np.bincount(rep, minlength=rep.shape[0])
 
 
+def split_cliques(rep: np.ndarray, suspect_reps: np.ndarray) -> np.ndarray:
+    """Reset every member of the suspect cliques to a singleton.
+
+    The inverse of min-hooking: members (including the representative
+    itself) become their own roots, and the incremental delete path's
+    forward pass re-merges whatever equalities the surviving facts still
+    support via :func:`merge_pairs_np` / :func:`merge_pairs_jax` — only the
+    affected connected components are ever recomputed.
+    """
+    if suspect_reps.shape[0] == 0:
+        return rep
+    rep = rep.copy()
+    members = clique_members(rep)
+    for r in suspect_reps:
+        mem = members.get(int(r))
+        if mem is not None:
+            rep[mem] = mem.astype(rep.dtype)
+    return compress_np(rep)
+
+
 def clique_members(rep: np.ndarray) -> dict[int, np.ndarray]:
     """representative -> member array, only for cliques of size > 1."""
     rep = compress_np(np.asarray(rep))

@@ -76,3 +76,14 @@ def rewrite_triples(
         interpret=interpret,
     )(spo_p, rho_p)
     return out[:n], changed[:n, 0].astype(bool)
+
+
+def rewrite_owner(
+    spo: jnp.ndarray, rho: jnp.ndarray, n_shards: int, **kw
+) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Fused ``(rho[spo], owner)`` where owner = subject representative mod
+    the shard count — the routing key of the engine's owner-routed delta
+    exchange.  Used by the incremental delete path to owner-sort tombstone
+    seed queries before they are shipped to the mesh."""
+    out, _changed = rewrite_triples(spo, rho, **kw)
+    return out, out[:, 0] % jnp.int32(n_shards)

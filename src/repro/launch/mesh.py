@@ -23,7 +23,7 @@ from repro.compat import axis_types_auto, make_mesh
 
 __all__ = [
     "axis_types_auto", "make_mesh", "make_production_mesh",
-    "make_engine_mesh", "data_axes", "model_axis",
+    "make_engine_mesh", "mesh_size", "data_axes", "model_axis",
 ]
 
 
@@ -34,9 +34,24 @@ def make_production_mesh(*, multi_pod: bool = False):
 
 
 def make_engine_mesh(n_devices: int | None = None, axis: str = "data"):
-    """1-D mesh for the SPMD materialisation engine."""
-    n = n_devices or len(jax.devices())
+    """1-D mesh for the SPMD materialisation engine.
+
+    ``n_devices`` smaller than the process's device count builds the mesh
+    over a prefix of the devices — the device-count-invariance tests run
+    1/2/4-shard engines inside one 4-device process this way.
+    """
+    devs = jax.devices()
+    n = n_devices or len(devs)
+    if n < len(devs):
+        return make_mesh((n,), (axis,), devices=devs[:n])
     return make_mesh((n,), (axis,))
+
+
+def mesh_size(mesh) -> int:
+    """Total device count of a mesh (the engine's shard count on 1-D meshes)."""
+    import numpy as np
+
+    return int(np.prod(mesh.devices.shape))
 
 
 def data_axes(mesh) -> tuple[str, ...]:

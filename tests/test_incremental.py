@@ -28,16 +28,9 @@ def _packset(spo):
 
 def _explicit_apply(explicit, op, delta):
     """Oracle-side explicit-set bookkeeping (same semantics as the state)."""
-    delta = np.asarray(delta, np.int32).reshape(-1, 3)
-    cur = _packset(explicit)
-    if op == "add":
-        cur |= _packset(delta)
-    else:
-        cur -= _packset(delta)
-    from repro.core.triples import unpack
+    from repro.core.triples import apply_op
 
-    keys = np.asarray(sorted(cur), dtype=np.int64)
-    return unpack(keys) if keys.shape[0] else np.zeros((0, 3), np.int32)
+    return apply_op(explicit, op, delta)
 
 
 def assert_matches_scratch(state, explicit, program, n_resources, expand_check=False):
@@ -217,6 +210,137 @@ def test_update_streams_match_scratch(gen_kw, seed):
         assert_matches_scratch(state, explicit, prog, dic.n_resources)
 
 
+def test_delete_then_readd_in_one_stream():
+    """delete(D); add(D) inside one stream restores store and rho exactly."""
+    facts, prog, dic = generate(
+        n_groups=2, group_size=3, n_spokes_per=1, n_plain=20, hierarchy_depth=1
+    )
+    state = materialise_incremental(facts, prog, dic.n_resources)
+    before = _packset(state.triples())
+    rep_before = state.rep.copy()
+    idp = dic.id_of(":idProp")
+    delta = facts[np.flatnonzero(facts[:, 1] == idp)[:3]]
+    delete_facts(state, delta)
+    assert _packset(state.triples()) != before  # the split happened
+    add_facts(state, delta)
+    assert _packset(state.triples()) == before
+    assert (state.rep == rep_before).all()
+    assert_matches_scratch(state, facts, prog, dic.n_resources)
+
+
+# ---------------------------------------------------------------------------
+# differential fuzz harness: sharded incremental vs from-scratch oracle
+# ---------------------------------------------------------------------------
+
+def _run_differential_stream(gen_kw, seed, n_events, batch, engine=True):
+    """Apply a sampled update stream and assert oracle equality per batch.
+
+    ``engine=True`` drives the sharded device path
+    (:meth:`JaxEngine.add_facts` / ``delete_facts``); ``engine=False`` the
+    host reference subsystem.  Either way the result after EVERY batch must
+    equal from-scratch ``materialise_rew`` on the updated explicit set.
+    """
+    facts, prog, dic = generate(**gen_kw, seed=seed)
+    events = sample_update_stream(
+        facts, dic, n_events=n_events, batch=batch, seed=seed
+    )
+    stream_desc = [(op, delta.shape[0]) for op, delta in events]
+    explicit = facts
+    if engine:
+        from repro.core.engine_jax import JaxEngine
+
+        eng = JaxEngine(
+            dic.n_resources, capacity=1 << 11, bind_cap=1 << 11,
+            out_cap=1 << 11, rewrite_cap=1 << 11,
+        )
+        state = eng.materialise_state(facts, prog)
+        for i, (op, delta) in enumerate(events):
+            explicit = _explicit_apply(explicit, op, delta)
+            (eng.add_facts if op == "add" else eng.delete_facts)(state, delta)
+            ref = materialise_rew(explicit, prog, dic.n_resources)
+            got, want = _packset(eng.state_triples(state)), _packset(ref.triples())
+            assert got == want, (
+                f"store diverged after event {i} of {stream_desc}: "
+                f"+{len(got - want)}/-{len(want - got)} triples"
+            )
+            rep = eng.state_rep(state)
+            assert (rep[: ref.rep.shape[0]] == ref.rep).all(), (
+                f"rho diverged after event {i} of {stream_desc}"
+            )
+            tail = rep[ref.rep.shape[0]:]
+            assert (tail == np.arange(ref.rep.shape[0], rep.shape[0])).all()
+    else:
+        state = materialise_incremental(facts, prog, dic.n_resources)
+        for i, (op, delta) in enumerate(events):
+            explicit = _explicit_apply(explicit, op, delta)
+            (add_facts if op == "add" else delete_facts)(state, delta)
+            assert_matches_scratch(state, explicit, prog, dic.n_resources)
+
+
+_FUZZ_COMBOS = [
+    (dict(n_groups=2, group_size=3, n_spokes_per=1, n_plain=15,
+          hierarchy_depth=1), 7, 4, 8, True),
+    (dict(n_groups=1, group_size=4, n_spokes_per=2, n_plain=5,
+          hierarchy_depth=0), 11, 5, 6, True),
+    (dict(n_groups=3, group_size=2, n_spokes_per=1, n_plain=25,
+          hierarchy_depth=2, chain_rules=True), 13, 4, 10, False),
+    (dict(n_groups=2, group_size=3, n_spokes_per=2, n_plain=20,
+          hierarchy_depth=1, hometown_groups=1, hometown_size=4), 17, 5, 8,
+     False),
+]
+
+
+@pytest.mark.parametrize(
+    "gen_kw, seed, n_events, batch, engine", _FUZZ_COMBOS,
+    ids=["eng_basic", "eng_dense", "host_chains", "host_hometown"],
+)
+def test_fuzz_fallback_streams(gen_kw, seed, n_events, batch, engine):
+    """Seeded differential fuzz that runs without hypothesis installed."""
+    _run_differential_stream(gen_kw, seed, n_events, batch, engine=engine)
+
+
+try:
+    from hypothesis import HealthCheck, given, settings, strategies as st
+
+    HAVE_HYPOTHESIS = True
+except ImportError:  # container without the test extra: fallback fuzz only
+    HAVE_HYPOTHESIS = False
+
+if HAVE_HYPOTHESIS:
+    _stream_params = given(
+        seed=st.integers(0, 2**16),
+        n_events=st.integers(1, 5),
+        batch=st.integers(2, 12),
+        n_groups=st.integers(1, 3),
+        group_size=st.integers(2, 4),
+        n_plain=st.integers(0, 25),
+        hierarchy_depth=st.integers(0, 2),
+    )
+    _fuzz_settings = dict(
+        deadline=None,
+        suppress_health_check=[HealthCheck.too_slow, HealthCheck.data_too_large],
+    )
+
+    def _fuzz_body(seed, n_events, batch, n_groups, group_size, n_plain,
+                   hierarchy_depth):
+        gen_kw = dict(
+            n_groups=n_groups, group_size=group_size, n_spokes_per=1,
+            n_plain=n_plain, hierarchy_depth=hierarchy_depth,
+        )
+        _run_differential_stream(gen_kw, seed, n_events, batch, engine=True)
+
+    # quick budget for tier-1; hypothesis shrinks a failing case to a
+    # minimal stream (fewest events, smallest batches, tiniest graph)
+    test_fuzz_update_stream_differential = _stream_params(
+        settings(max_examples=10, **_fuzz_settings)(_fuzz_body)
+    )
+
+    # nightly tier: larger example budget, deselectable via -m "not slow"
+    test_fuzz_update_stream_differential_nightly = pytest.mark.slow(
+        _stream_params(settings(max_examples=100, **_fuzz_settings)(_fuzz_body))
+    )
+
+
 # ---------------------------------------------------------------------------
 # kernel-batched normal forms + engine integration
 # ---------------------------------------------------------------------------
@@ -232,6 +356,22 @@ def test_normal_forms_kernel_parity():
     np_out = normal_forms(spo, rep, use_kernel=False)
     k_out = normal_forms(spo, rep, use_kernel=True)
     assert (np_out == k_out).all()
+
+
+def test_rewrite_owner_kernel_parity():
+    """Fused (normal form, owner shard) matches the numpy route keys."""
+    from repro.core.uf import compress_np
+    from repro.kernels.rewrite_triples import rewrite_owner
+
+    rng = np.random.default_rng(1)
+    rep = np.arange(300, dtype=np.int32)
+    rep[rng.integers(0, 300, size=60)] = rng.integers(0, 50, size=60)
+    rep = compress_np(rep)
+    spo = rng.integers(0, 300, size=(200, 3)).astype(np.int32)
+    for n_shards in (1, 4):
+        nf, owner = rewrite_owner(spo, rep, n_shards)
+        assert (np.asarray(nf) == rep[spo]).all()
+        assert (np.asarray(owner) == rep[spo][:, 0] % n_shards).all()
 
 
 def test_delete_with_kernel_normal_forms():

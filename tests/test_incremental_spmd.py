@@ -1,0 +1,262 @@
+"""Sharded incremental maintenance (engine path) vs the from-scratch oracle.
+
+In-process tests run the device path single-device (the same code the mesh
+wraps with shard_map); the mesh-parametrised equivalence tests run in a
+subprocess with 4 fake CPU devices (``XLA_FLAGS`` must be set before the
+first jax import — the pattern of tests/test_distributed.py) and assert
+device-count invariance of the final store across 1/2/4 shards plus the
+owner-routed exchange variant.
+"""
+
+import os
+import subprocess
+import sys
+import textwrap
+
+import numpy as np
+import pytest
+
+from repro.core.engine_jax import CapacityError, JaxEngine
+from repro.core.materialise import materialise_rew
+from repro.core.triples import apply_op as _apply, pack
+from repro.data.datasets import clique_with_spokes, pex, single_clique
+from repro.data.generator import generate, sample_update_stream
+
+
+def _packset(spo):
+    return set(pack(np.asarray(spo, np.int32).reshape(-1, 3)).tolist())
+
+
+def _engine(dic, cap=1 << 10, **kw):
+    return JaxEngine(
+        dic.n_resources, capacity=cap, bind_cap=cap, out_cap=cap,
+        rewrite_cap=cap, **kw,
+    )
+
+
+def _assert_state_matches_scratch(eng, state, explicit, program, n_resources):
+    ref = materialise_rew(explicit, program, n_resources)
+    assert _packset(eng.state_triples(state)) == _packset(ref.triples())
+    rep = eng.state_rep(state)
+    assert (rep[: ref.rep.shape[0]] == ref.rep).all()
+    tail = rep[ref.rep.shape[0] :]
+    assert (tail == np.arange(ref.rep.shape[0], rep.shape[0])).all()
+
+
+# ---------------------------------------------------------------------------
+# single-device engine path (in-process)
+# ---------------------------------------------------------------------------
+
+def test_engine_add_matches_scratch():
+    facts, prog, dic = pex()
+    eng = _engine(dic, cap=256)
+    state = eng.materialise_state(facts[:1], prog)
+    eng.add_facts(state, facts[1:])
+    _assert_state_matches_scratch(eng, state, facts, prog, dic.n_resources)
+
+
+def test_engine_add_new_resources_grows_rep():
+    facts, prog, dic = pex()
+    eng = _engine(dic, cap=256)
+    state = eng.materialise_state(facts, prog)
+    new_id = dic.n_resources + 5
+    delta = np.asarray([[new_id, facts[0, 1], facts[0, 2]]], np.int32)
+    eng.add_facts(state, delta)
+    all_facts = np.concatenate([facts, delta], axis=0)
+    ref = materialise_rew(all_facts, prog, new_id + 1)
+    assert _packset(eng.state_triples(state)) == _packset(ref.triples())
+    assert (eng.state_rep(state) == ref.rep[: state.n_res]).all()
+
+
+def test_engine_delete_splits_clique():
+    facts, prog, dic = single_clique(6)
+    eng = _engine(dic, cap=256)
+    state = eng.materialise_state(facts, prog)
+    eng.delete_facts(state, facts[2:3])  # a2 ~ a3: {a0..a2} | {a3..a5}
+    remaining = np.concatenate([facts[:2], facts[3:]], axis=0)
+    _assert_state_matches_scratch(eng, state, remaining, prog, dic.n_resources)
+    reps = np.unique(eng.state_rep(state)[np.unique(facts[:, [0, 2]])])
+    assert reps.shape[0] == 2
+    assert state.stats.suspects_split >= 1
+    assert state.stats.overdeleted > 0
+
+
+def test_engine_delete_derived_sameas_support():
+    """Deleting :idProp edges must split the rule-derived clique on-device."""
+    facts, prog, dic = generate(
+        n_groups=3, group_size=4, n_spokes_per=2, n_plain=30, hierarchy_depth=2
+    )
+    eng = _engine(dic)
+    state = eng.materialise_state(facts, prog)
+    idp = dic.id_of(":idProp")
+    id_rows = np.flatnonzero(facts[:, 1] == idp)
+    delta = facts[id_rows[:2]]
+    eng.delete_facts(state, delta)
+    remaining = facts[~np.isin(pack(facts), pack(delta))]
+    _assert_state_matches_scratch(eng, state, remaining, prog, dic.n_resources)
+
+
+def test_engine_update_stream_matches_scratch():
+    facts, prog, dic = generate(
+        n_groups=3, group_size=3, n_spokes_per=2, n_plain=40,
+        hierarchy_depth=2, seed=0,
+    )
+    events = sample_update_stream(facts, dic, n_events=5, batch=10, seed=0)
+    eng = _engine(dic, cap=1 << 11)
+    state = eng.materialise_state(facts, prog)
+    explicit = facts
+    for op, delta in events:
+        explicit = _apply(explicit, op, delta)
+        (eng.add_facts if op == "add" else eng.delete_facts)(state, delta)
+        _assert_state_matches_scratch(eng, state, explicit, prog, dic.n_resources)
+
+
+# ---------------------------------------------------------------------------
+# edge cases on the engine path
+# ---------------------------------------------------------------------------
+
+def test_engine_empty_and_nonexistent_deltas_are_noops():
+    facts, prog, dic = pex()
+    eng = _engine(dic, cap=256)
+    state = eng.materialise_state(facts, prog)
+    before = _packset(eng.state_triples(state))
+    r_before = state.r
+    eng.add_facts(state, np.zeros((0, 3), np.int32))
+    eng.delete_facts(state, np.zeros((0, 3), np.int32))
+    eng.add_facts(state, facts)  # re-adding explicit facts is a no-op
+    eng.delete_facts(state, np.asarray([[9, 9, 9]], np.int32))  # not explicit
+    assert _packset(eng.state_triples(state)) == before
+    assert state.r == r_before  # no rounds were spent
+    _assert_state_matches_scratch(eng, state, facts, prog, dic.n_resources)
+
+
+def test_engine_delete_then_readd_in_one_stream():
+    """delete(D); add(D) inside one update stream returns to the original."""
+    facts, prog, dic = generate(
+        n_groups=2, group_size=3, n_spokes_per=1, n_plain=20, hierarchy_depth=1
+    )
+    eng = _engine(dic)
+    state = eng.materialise_state(facts, prog)
+    before = _packset(eng.state_triples(state))
+    rep_before = eng.state_rep(state)
+    idp = dic.id_of(":idProp")
+    delta = facts[np.flatnonzero(facts[:, 1] == idp)[:3]]
+    eng.delete_facts(state, delta)
+    assert _packset(eng.state_triples(state)) != before  # the split happened
+    eng.add_facts(state, delta)
+    assert _packset(eng.state_triples(state)) == before
+    assert (eng.state_rep(state) == rep_before).all()
+    _assert_state_matches_scratch(eng, state, facts, prog, dic.n_resources)
+
+
+def test_engine_delete_everything():
+    facts, prog, dic = single_clique(5)
+    eng = _engine(dic, cap=256)
+    state = eng.materialise_state(facts, prog)
+    eng.delete_facts(state, facts)
+    assert eng.state_triples(state).shape[0] == 0
+    assert (eng.state_rep(state) == np.arange(dic.n_resources)).all()
+
+
+def test_capacity_error_raised_not_truncated():
+    """Tombstone-heavy rounds overflow the fixed arena: retracted rows stay
+    (marked) in the arena while rederivation inserts fresh rows, so repeated
+    delete/re-add churn must raise CapacityError with retry disabled — and
+    transparently grow (matching the oracle) with retry enabled."""
+    facts, prog, dic = clique_with_spokes(7, 4)
+    base = JaxEngine(dic.n_resources, capacity=1 << 10, bind_cap=1 << 10,
+                     out_cap=1 << 10, rewrite_cap=1 << 10)
+    used = int(np.asarray(base.materialise_state(facts, prog).n_used).sum())
+
+    # an arena with barely more rows than the base store: the first delete's
+    # rederive pass (which appends, never reclaims) cannot fit
+    snug = used + 2
+    eng = JaxEngine(dic.n_resources, capacity=snug, bind_cap=1 << 10,
+                    out_cap=1 << 10, rewrite_cap=1 << 10)
+    state = eng.materialise_state(facts, prog)
+    with pytest.raises(CapacityError):
+        eng.delete_facts(state, facts[2:4], retry=False)
+
+    eng2 = JaxEngine(dic.n_resources, capacity=snug, bind_cap=1 << 10,
+                     out_cap=1 << 10, rewrite_cap=1 << 10)
+    st2 = eng2.materialise_state(facts, prog)
+    eng2.delete_facts(st2, facts[2:4])  # retry=True grows the arena
+    assert eng2.capacity > snug
+    remaining = np.concatenate([facts[:2], facts[4:]], axis=0)
+    _assert_state_matches_scratch(eng2, st2, remaining, prog, dic.n_resources)
+
+
+def test_engine_from_config():
+    from repro.configs.sameas_rew import REDUCED
+
+    facts, prog, dic = pex()
+    eng = JaxEngine.from_config(REDUCED, n_resources=dic.n_resources)
+    assert eng.seed_chunk == REDUCED.seed_chunk
+    state = eng.materialise_state(facts, prog)
+    eng.delete_facts(state, facts[1:2])
+    remaining = np.concatenate([facts[:1], facts[2:]], axis=0)
+    _assert_state_matches_scratch(eng, state, remaining, prog, dic.n_resources)
+
+
+# ---------------------------------------------------------------------------
+# mesh-parametrised equivalence (subprocess with 4 fake devices)
+# ---------------------------------------------------------------------------
+
+_MESH_SCRIPT = textwrap.dedent(
+    """
+    import numpy as np, jax
+    from repro.core.engine_jax import JaxEngine
+    from repro.core.materialise import materialise_rew
+    from repro.core.triples import apply_op as apply, pack
+    from repro.data.generator import generate, sample_update_stream
+    from repro.launch.mesh import make_engine_mesh, mesh_size
+
+    assert len(jax.devices()) == 4, jax.devices()
+
+    def packset(x):
+        return set(pack(np.asarray(x, np.int32).reshape(-1, 3)).tolist())
+
+    facts, prog, dic = generate(n_groups=2, group_size=3, n_spokes_per=1,
+                                n_plain=15, hierarchy_depth=1, seed=3)
+    events = sample_update_stream(facts, dic, n_events=4, batch=8, seed=3)
+
+    finals = {}
+    cells = [("m1", make_engine_mesh(1), None), ("m2", make_engine_mesh(2), None),
+             ("m4", make_engine_mesh(4), None), ("m4_routed", make_engine_mesh(4), 256)]
+    for name, mesh, route_cap in cells:
+        assert mesh_size(mesh) in (1, 2, 4)
+        eng = JaxEngine(dic.n_resources, capacity=1 << 10, bind_cap=1 << 10,
+                        out_cap=1 << 10, rewrite_cap=1 << 10, mesh=mesh,
+                        route_cap=route_cap, seed_chunk=128)
+        state = eng.materialise_state(facts, prog)
+        explicit = facts
+        for op, delta in events:
+            explicit = apply(explicit, op, delta)
+            (eng.add_facts if op == "add" else eng.delete_facts)(state, delta)
+            ref = materialise_rew(explicit, prog, dic.n_resources)
+            assert packset(eng.state_triples(state)) == packset(ref.triples()), (name, op)
+            assert (eng.state_rep(state) == ref.rep).all(), (name, op)
+        finals[name] = packset(eng.state_triples(state))
+    assert finals["m1"] == finals["m2"] == finals["m4"] == finals["m4_routed"]
+    print("SPMD-INC-OK")
+    """
+)
+
+
+@pytest.mark.slow
+def test_sharded_deltas_device_count_invariant():
+    """The sharded delta path on 1/2/4 virtual devices (gather + owner-routed
+    exchange) is oracle-equal per event and device-count invariant."""
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
+    env["PYTHONPATH"] = "src"
+    out = subprocess.run(
+        [sys.executable, "-c", _MESH_SCRIPT],
+        capture_output=True,
+        text=True,
+        env=env,
+        cwd=os.path.dirname(os.path.dirname(os.path.abspath(__file__))),
+        timeout=900,
+    )
+    assert out.returncode == 0, out.stderr[-2000:]
+    assert "SPMD-INC-OK" in out.stdout
