@@ -6,6 +6,8 @@
   kernels -> bench_kernels          (Pallas interpret-mode vs jnp oracle)
   updates -> bench_incremental      (host vs sharded maintenance rounds vs
                                      from-scratch; writes BENCH_incremental.json)
+  serve   -> bench_serve_updates    (query latency idle vs during maintenance
+                                     epochs; writes BENCH_serve.json)
 
 ``python -m benchmarks.run [section ...]`` — default: all sections.
 """
@@ -19,6 +21,7 @@ import time
 def main() -> None:
     sections = sys.argv[1:] or [
         "materialisation", "scaling", "sparql", "kernels", "incremental",
+        "serve",
     ]
     t0 = time.time()
     if "materialisation" in sections:
@@ -56,6 +59,13 @@ def main() -> None:
         from benchmarks import bench_incremental
 
         bench_incremental.main(out_json="BENCH_incremental.json")
+    if "serve" in sections:
+        print("=" * 72)
+        print("Serving: SPARQL latency idle vs during maintenance epochs")
+        print("=" * 72)
+        from benchmarks import bench_serve_updates
+
+        bench_serve_updates.main(out_json="BENCH_serve.json")
     print(f"\n[benchmarks] total {time.time() - t0:.1f}s")
 
 

@@ -50,7 +50,7 @@ from repro.compat import shard_map as compat_shard_map
 from .rules import Program, Rule
 from .stats import MatStats
 from .terms import DIFFERENT_FROM, SAME_AS, is_var
-from .uf import compress_np, merge_pairs_jax
+from .uf import FrozenRho, compress_np, merge_pairs_jax
 
 with warnings.catch_warnings():
     warnings.simplefilter("ignore", DeprecationWarning)
@@ -563,10 +563,38 @@ class EngineState:
     explicit: np.ndarray
     r: int
     stats: MatStats
+    # maintenance-epoch counter: number of COMPLETED update operations since
+    # the base fixpoint (which is epoch 0).  Distinct from ``r``/``epoch``
+    # (the per-round delta discipline): readers version themselves on this,
+    # and it only ever advances at an epoch barrier — never mid-operation.
+    update_epoch: int = 0
 
     @property
     def n_res(self) -> int:
         return int(self.rep.shape[0])
+
+
+@dataclass(frozen=True)
+class StoreSnapshot:
+    """Immutable, epoch-consistent read view of an :class:`EngineState`.
+
+    Published at epoch barriers only — after a maintenance operation's
+    fixpoint completes, never mid-round — so a query evaluated against a
+    snapshot observes exactly the fixpoint of maintenance epoch ``epoch``:
+    no tombstoned-but-not-yet-rederived rows, no half-applied clique split.
+    ``triples`` is a host copy of the live normal-form store and ``rho`` the
+    frozen representative view whose clique tables are shared by every query
+    answered at this epoch (the serving contract of
+    :mod:`repro.serve.triple_store`; docs/serving.md).
+    """
+
+    epoch: int
+    triples: np.ndarray
+    rho: FrozenRho
+
+    @property
+    def n_res(self) -> int:
+        return len(self.rho)
 
 
 class JaxEngine:
@@ -615,6 +643,7 @@ class JaxEngine:
         # for every plan (its early deltas are dataset-sized).
         self.delta_out = delta_out_cap or min(out_cap, max(1 << 12, out_cap >> 4))
         self._active_delta_out = out_cap
+        self._active_delta_kind = "out"
         self.use_kernel = use_kernel
         self.mesh = mesh
         self.axis = axis if mesh is not None else None
@@ -759,6 +788,34 @@ class JaxEngine:
         cand_valid = jnp.asarray(np.arange(rows_global) < rows.shape[0])
         return cands, cand_valid
 
+    def _set_update_buffers(self, updating: bool) -> None:
+        """Select the output buffer delta/tomb plans emit into.
+
+        During maintenance updates that is the narrow ``delta_out`` buffer;
+        during the base run it is the full ``out_cap`` (early deltas are
+        dataset-sized).  The active *kind* names the capacity a retry must
+        grow — the two buffers can coincide in size, so the label cannot be
+        recovered from the value.
+        """
+        self._active_delta_out = self.delta_out if updating else self.out_cap
+        self._active_delta_kind = "delta_out" if updating else "out"
+
+    def _evict_stale_fns(self, old_values: set) -> None:
+        """Drop compiled fns (and padbuf device buffers) that baked an
+        outgrown capacity.  Cache keys embed the cap values they were built
+        with, so a value match over the key tuples identifies every stale
+        entry; a coincidental match merely costs one recompile, while
+        keeping stale entries would retain their XLA executables for the
+        engine's (a standing service's) lifetime."""
+
+        def hit(x):
+            if isinstance(x, tuple):
+                return any(hit(y) for y in x)
+            return isinstance(x, int) and x in old_values
+
+        for key in [k for k in self._fns if hit(k)]:
+            del self._fns[key]
+
     def _grow_for(self, kind: str) -> None:
         """Double exactly the capacity a :class:`CapacityError` names.
 
@@ -766,32 +823,43 @@ class JaxEngine:
         proportional to the workload — a bind-table overflow must not
         quadruple the arena sort.  Every tunable cap is part of the compiled
         fn cache keys (and jit itself re-traces on array-shape changes), so
-        nothing needs invalidating: fns for the old sizes simply stop being
-        used, and only the fns that bake the grown cap recompile.
+        correctness needs no invalidation; stale-cap entries are still
+        evicted so their executables are reclaimed.
         """
+        grew: set = set()
+
+        def double(attr: str) -> None:
+            # the arena capacity is not part of any fn cache key (jit
+            # re-traces on the new array shapes), so it never marks stale
+            if attr != "capacity":
+                grew.add(getattr(self, attr))
+            setattr(self, attr, getattr(self, attr) * 2)
+
         if kind == "store":
-            self.capacity *= 2
+            double("capacity")
         elif kind == "bind":
-            self.bind_cap *= 2
+            double("bind_cap")
         elif kind in ("out", "out_cap"):
-            self.out_cap *= 2
+            double("out_cap")
         elif kind == "delta_out":
-            self.delta_out *= 2
+            double("delta_out")
         elif kind == "rewrite":
-            self.rewrite_cap *= 2
+            double("rewrite_cap")
         elif kind == "pair":
-            self.pair_cap *= 2
+            double("pair_cap")
         elif kind == "route" and self.route_cap is not None:
-            self.route_cap *= 2
+            double("route_cap")
         else:  # unknown kind: grow everything (defensive)
-            self.capacity *= 2
-            self.bind_cap *= 2
-            self.out_cap *= 2
-            self.delta_out *= 2
-            self.rewrite_cap *= 2
-            self.pair_cap *= 2
+            for attr in ("capacity", "bind_cap", "out_cap", "delta_out",
+                         "rewrite_cap", "pair_cap"):
+                double(attr)
             if self.route_cap is not None:
-                self.route_cap *= 2
+                double("route_cap")
+        # keep the active delta buffer (and its retry label) in sync with
+        # whichever capacity the running operation is emitting into
+        self._set_update_buffers(self._active_delta_kind == "delta_out")
+        if grew:
+            self._evict_stale_fns(grew)
 
     def _bucket_cands(self, bufs):
         """Concatenate plan output buffers, padding each width group with
@@ -846,7 +914,7 @@ class JaxEngine:
 
         snap = {f: getattr(state, f) for f in (
             "spo", "epoch", "marked", "tomb", "n_used", "rep",
-            "program", "explicit", "r",
+            "program", "explicit", "r", "update_epoch",
         )}
         snap["stats"] = copy.copy(state.stats)
         return snap
@@ -874,6 +942,59 @@ class JaxEngine:
 
     def state_rep(self, state: EngineState) -> np.ndarray:
         return compress_np(np.asarray(state.rep))
+
+    @staticmethod
+    def snapshot_arrays(spo, epoch, marked, rep, at_epoch: int) -> StoreSnapshot:
+        """Build a :class:`StoreSnapshot` from raw barrier-consistent arrays.
+
+        The arrays must describe an epoch barrier (an operation fixpoint) —
+        either a live :class:`EngineState` between updates, or the rollback
+        snapshot captured before an in-flight update started (the serving
+        scheduler's lazy-publication path).
+        """
+        live = (np.asarray(epoch) >= 0) & ~np.asarray(marked)
+        triples = np.asarray(spo)[live]
+        triples.setflags(write=False)  # shared by every reader at this epoch
+        return StoreSnapshot(
+            epoch=at_epoch,
+            triples=triples,
+            rho=FrozenRho(np.asarray(rep)),
+        )
+
+    def read_snapshot(self, state: EngineState) -> StoreSnapshot:
+        """Epoch-versioned read snapshot: host triples copy + frozen rho.
+
+        Only valid at an epoch barrier (no update in flight on ``state``) —
+        mid-operation the arena holds tombstoned-but-not-yet-rederived rows
+        that no reader may observe.  :meth:`add_facts`/:meth:`delete_facts`
+        bump ``state.update_epoch`` exactly when the barrier is reached, so
+        snapshots taken between public API calls are always consistent.
+        """
+        snap = self.snapshot_arrays(
+            state.spo, state.epoch, state.marked, state.rep, state.update_epoch
+        )
+        state.stats.triples_unmarked = int(snap.triples.shape[0])
+        return snap
+
+    def _recover_capacity(
+        self, state: EngineState, snap: dict, err: CapacityError
+    ) -> None:
+        """Roll back to ``snap``, grow exactly the exhausted capacity, and
+        re-layout the sharded arena if the store itself grew — the shared
+        retry step of :meth:`_apply_update` and the serving scheduler
+        (:mod:`repro.serve.triple_store`)."""
+        self._restore(state, snap)
+        old_cap = self.capacity
+        self._grow_for(str(err))
+        if self.capacity != old_cap:
+            self._grow_state_arena(state, old_cap)
+
+    def _barrier(self, state: EngineState) -> None:
+        """The epoch barrier: an update operation's fixpoint is complete.
+        No-op updates cross it too — their fixpoint is the unchanged store,
+        and readers' epochs must stay monotone and attributable."""
+        state.update_epoch += 1
+        self._refresh_stats(state)
 
     # -- driver --------------------------------------------------------------
     def _forward(
@@ -1020,8 +1141,11 @@ class JaxEngine:
             if bool(np.asarray(ov_bind).any()):
                 raise CapacityError("bind")
             if bool(np.asarray(ov_out).any()):
+                # full plans always emit into out_cap; delta/tomb plans into
+                # whichever buffer is active (the kind label, not a value
+                # comparison — the two caps may coincide in size)
                 raise CapacityError(
-                    "out" if out_cap == self.out_cap else "delta_out"
+                    "out" if mode == "full" else self._active_delta_kind
                 )
             if stats is not None:
                 stats.derivations += int(np.asarray(n_d).sum())
@@ -1042,7 +1166,7 @@ class JaxEngine:
             try:
                 # the base run's early deltas are dataset-sized: delta plans
                 # use the full out_cap here, the narrow delta_out on updates
-                self._active_delta_out = self.out_cap
+                self._set_update_buffers(False)
                 with enable_x64():
                     state = self._fresh_state(program)
                     state.stats.triples_explicit = facts.shape[0]
@@ -1079,7 +1203,7 @@ class JaxEngine:
         while True:
             snap = self._snapshot(state)
             try:
-                self._active_delta_out = self.delta_out
+                self._set_update_buffers(True)
                 with enable_x64():
                     if op == "add":
                         spmd_add_facts(self, state, delta, max_rounds)
@@ -1089,12 +1213,8 @@ class JaxEngine:
             except CapacityError as e:
                 if not retry:
                     raise
-                self._restore(state, snap)
-                old_cap = self.capacity
-                self._grow_for(str(e))
-                if self.capacity != old_cap:
-                    self._grow_state_arena(state, old_cap)
-        self._refresh_stats(state)
+                self._recover_capacity(state, snap, e)
+        self._barrier(state)
         state.stats.wall_seconds += time.perf_counter() - t0
         return state
 

@@ -70,7 +70,12 @@ from .terms import SAME_AS, is_var
 from .triples import dedup_rows, pack, setdiff_rows
 from .uf import clique_sizes, split_cliques
 
-__all__ = ["spmd_add_facts", "spmd_delete_facts"]
+__all__ = [
+    "spmd_add_facts",
+    "spmd_add_phases",
+    "spmd_delete_facts",
+    "spmd_delete_phases",
+]
 
 
 # ---------------------------------------------------------------------------
@@ -370,12 +375,22 @@ def _head_may_rederive(rule, od_mask: np.ndarray, rep_old: np.ndarray) -> bool:
 # drivers (called by JaxEngine.add_facts / delete_facts inside enable_x64)
 # ---------------------------------------------------------------------------
 
-def spmd_add_facts(engine, state: EngineState, delta, max_rounds: int) -> EngineState:
-    """Additions: seed the engine's forward loop with the fresh triples."""
+def spmd_add_phases(engine, state: EngineState, delta, max_rounds: int):
+    """Phase generator behind :func:`spmd_add_facts`.
+
+    Yields a label at each point a serving scheduler may interleave other
+    work (the mutation is NOT epoch-consistent until the generator is
+    exhausted): ``"prepared"`` after the explicit-set bookkeeping, then the
+    forward fixpoint runs to completion.  A driver must either exhaust the
+    generator or roll the state back to a snapshot taken before it started
+    (:meth:`JaxEngine._snapshot`) — e.g. on :class:`CapacityError`, whose
+    retry restarts the phases from scratch against the restored state.
+    A no-effect delta yields nothing.
+    """
     delta = dedup_rows(delta)
     delta = setdiff_rows(delta, state.explicit)
     if delta.shape[0] == 0:
-        return state
+        return
     hi = int(delta.max()) + 1
     if hi > state.n_res:  # unseen resource IDs: extend rho with identities
         rep_host = np.asarray(state.rep)
@@ -384,19 +399,41 @@ def spmd_add_facts(engine, state: EngineState, delta, max_rounds: int) -> Engine
     state.explicit = np.concatenate([state.explicit, delta], axis=0)
     state.stats.triples_explicit = state.explicit.shape[0]
     cands, cand_valid = engine._pad_cands(delta)
+    yield "prepared"
     engine._forward(state, cands, cand_valid, [], max_rounds)
+
+
+def spmd_add_facts(engine, state: EngineState, delta, max_rounds: int) -> EngineState:
+    """Additions: seed the engine's forward loop with the fresh triples."""
+    for _phase in spmd_add_phases(engine, state, delta, max_rounds):
+        pass
     return state
 
 
-def spmd_delete_facts(engine, state: EngineState, delta, max_rounds: int) -> EngineState:
-    """Deletions: tombstone waves on-device, split on host, rederive on-device."""
+def spmd_delete_phases(engine, state: EngineState, delta, max_rounds: int):
+    """Phase generator behind :func:`spmd_delete_facts`.
+
+    Yield points mark the scheduler-visible stages of the DRed pass:
+
+      * ``"seeded"`` — wave-0 tombstones tagged for the deleted normal forms,
+      * ``"wave"`` — after each overdelete wave that tagged new tombstones,
+      * ``"overdeleted"`` — tombstones finalised into ``marked`` (the live
+        arena now HIDES overdeleted rows that rederivation will restore —
+        the mid-round state an epoch snapshot must never expose),
+      * ``"split"`` — suspect cliques reverted to singletons and the program
+        re-rewritten under the split rho; the rederive/forward fixpoint then
+        runs to completion and the generator ends.
+
+    Same contract as :func:`spmd_add_phases`: exhaust or roll back; a
+    no-effect delta yields nothing.
+    """
     delta = dedup_rows(delta)
     if delta.shape[0] and state.explicit.shape[0]:
         delta = delta[np.isin(pack(delta), pack(state.explicit))]
     else:
         delta = np.zeros((0, 3), np.int32)
     if delta.shape[0] == 0:
-        return state
+        return
 
     explicit_new = setdiff_rows(state.explicit, delta)
     rep_host = np.asarray(state.rep)
@@ -418,6 +455,7 @@ def spmd_delete_facts(engine, state: EngineState, delta, max_rounds: int) -> Eng
     # owner-sorted queries: each shard's matches land in contiguous runs
     nf = dedup_rows(nf[np.argsort(owner, kind="stable")])
     _seed_query(engine, state, nf)
+    yield "seeded"
 
     # wave-1 frontier masks come from the seed normal forms themselves
     masks = np.zeros((3, state.n_res), dtype=bool)
@@ -443,12 +481,14 @@ def spmd_delete_facts(engine, state: EngineState, delta, max_rounds: int) -> Eng
         if int(np.asarray(n_new).reshape(-1)[0]) == 0:
             break
         masks = np.asarray(od_masks)
+        yield "wave"
 
     state.marked, state.tomb, od_mask, n_od = _finalize_fn(engine)(
         state.spo, state.epoch, state.marked, state.tomb, state.rep
     )
     n_od = int(np.asarray(n_od).reshape(-1)[0])
     state.stats.overdeleted += n_od
+    yield "overdeleted"
 
     # -- split: suspect cliques revert to singletons (host rho bookkeeping) --
     suspect_reps = np.flatnonzero(np.asarray(suspect))
@@ -457,6 +497,7 @@ def spmd_delete_facts(engine, state: EngineState, delta, max_rounds: int) -> Eng
     p_split, _ = state.base_program.rewrite(rep_split)
     state.rep = jnp.asarray(rep_split.astype(np.int32))
     state.program = p_split
+    yield "split"
 
     # -- rederive: requeue rules that can restore an overdeleted fact --------
     od_mask_h = np.asarray(od_mask)
@@ -491,4 +532,10 @@ def spmd_delete_facts(engine, state: EngineState, delta, max_rounds: int) -> Eng
     state.stats.triples_explicit = explicit_new.shape[0]
     cj, cv = engine._pad_cands(cands)
     engine._forward(state, cj, cv, requeued, max_rounds)
+
+
+def spmd_delete_facts(engine, state: EngineState, delta, max_rounds: int) -> EngineState:
+    """Deletions: tombstone waves on-device, split on host, rederive on-device."""
+    for _phase in spmd_delete_phases(engine, state, delta, max_rounds):
+        pass
     return state

@@ -121,10 +121,13 @@ def merge_pairs_jax(rep: jnp.ndarray, pairs: jnp.ndarray, pair_valid: jnp.ndarra
 # clique utilities (host)
 # ---------------------------------------------------------------------------
 
+def _sizes_compressed(rep: np.ndarray) -> np.ndarray:
+    return np.bincount(rep, minlength=rep.shape[0])
+
+
 def clique_sizes(rep: np.ndarray) -> np.ndarray:
     """sizes[r] = |clique represented by r| (1 for singletons, 0 for non-roots)."""
-    rep = compress_np(np.asarray(rep))
-    return np.bincount(rep, minlength=rep.shape[0])
+    return _sizes_compressed(compress_np(np.asarray(rep)))
 
 
 def split_cliques(rep: np.ndarray, suspect_reps: np.ndarray) -> np.ndarray:
@@ -147,9 +150,7 @@ def split_cliques(rep: np.ndarray, suspect_reps: np.ndarray) -> np.ndarray:
     return compress_np(rep)
 
 
-def clique_members(rep: np.ndarray) -> dict[int, np.ndarray]:
-    """representative -> member array, only for cliques of size > 1."""
-    rep = compress_np(np.asarray(rep))
+def _members_compressed(rep: np.ndarray) -> dict[int, np.ndarray]:
     order = np.argsort(rep, kind="stable")
     sorted_rep = rep[order]
     out: dict[int, np.ndarray] = {}
@@ -158,3 +159,50 @@ def clique_members(rep: np.ndarray) -> dict[int, np.ndarray]:
         if seg.shape[0] > 1:
             out[int(rep[seg[0]])] = np.sort(seg)
     return out
+
+
+def clique_members(rep: np.ndarray) -> dict[int, np.ndarray]:
+    """representative -> member array, only for cliques of size > 1."""
+    return _members_compressed(compress_np(np.asarray(rep)))
+
+
+class FrozenRho:
+    """Immutable, fully-compressed view of rho with cached clique structure.
+
+    The SPARQL executor needs ``compress_np`` plus the clique expansion
+    tables (``clique_members`` / ``clique_sizes``) for every answer; a
+    standing service evaluates many queries against the *same* maintenance
+    epoch's rho, so the epoch snapshot freezes the compression once and the
+    expansion tables are built lazily and shared across all of the epoch's
+    queries.  The underlying array is marked read-only so the view can be
+    handed to concurrent readers without defensive copies.
+    """
+
+    __slots__ = ("rep", "_members", "_sizes")
+
+    def __init__(self, rep: np.ndarray) -> None:
+        rep = compress_np(np.asarray(rep))
+        rep.setflags(write=False)
+        self.rep = rep
+        self._members: dict[int, np.ndarray] | None = None
+        self._sizes: np.ndarray | None = None
+
+    def __len__(self) -> int:
+        return int(self.rep.shape[0])
+
+    @property
+    def members(self) -> dict[int, np.ndarray]:
+        if self._members is None:
+            # rep is compressed by construction: skip the redundant sweep
+            self._members = _members_compressed(self.rep)
+        return self._members
+
+    @property
+    def sizes(self) -> np.ndarray:
+        if self._sizes is None:
+            self._sizes = _sizes_compressed(self.rep)
+        return self._sizes
+
+    def normalise(self, ids: np.ndarray) -> np.ndarray:
+        """rho-normal form of an int index array (e.g. an (n, 3) batch)."""
+        return self.rep[ids]

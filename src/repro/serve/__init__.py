@@ -1,3 +1,4 @@
 from .engine import Request, ServeEngine
+from .triple_store import QueryTicket, TripleStore, UpdateTicket
 
-__all__ = ["Request", "ServeEngine"]
+__all__ = ["Request", "ServeEngine", "TripleStore", "UpdateTicket", "QueryTicket"]

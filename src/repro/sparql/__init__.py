@@ -1,4 +1,4 @@
 from .algebra import Query
-from .executor import evaluate, evaluate_naive
+from .executor import evaluate, evaluate_at, evaluate_naive
 
-__all__ = ["Query", "evaluate", "evaluate_naive"]
+__all__ = ["Query", "evaluate", "evaluate_at", "evaluate_naive"]

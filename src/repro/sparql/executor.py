@@ -13,6 +13,14 @@
 rho(Q), project, then post-hoc expansion of the answer set): it loses
 multiplicities and produces wrong builtin results.  Kept for the tests and
 benchmarks that reproduce the paper's argument.
+
+Both evaluators accept either a raw representative array or a pre-frozen
+:class:`repro.core.uf.FrozenRho` — serving hands the latter so the clique
+expansion tables are computed once per maintenance epoch, not per query.
+``evaluate_at`` answers against an epoch snapshot handle
+(:class:`repro.core.engine_jax.StoreSnapshot`) instead of reading a live
+arena, returning the epoch alongside the bag so callers can attribute every
+answer to the completed fixpoint it was computed at (docs/serving.md).
 """
 
 from __future__ import annotations
@@ -23,24 +31,30 @@ import numpy as np
 
 from repro.core.seminaive import Bindings, join_atom
 from repro.core.terms import is_var
-from repro.core.uf import clique_members, clique_sizes, compress_np
+from repro.core.uf import FrozenRho
 
 from .algebra import Bind, FilterEq, Query
 
 
+def _norm_const(t: int, rep: np.ndarray) -> int:
+    """rho(t) for a query constant.
+
+    A constant interned after this rho was frozen (a resource the serving
+    epoch has never seen) is its own representative — a singleton — so the
+    query stays answerable (empty match) instead of indexing out of range.
+    """
+    return int(rep[t]) if t < rep.shape[0] else int(t)
+
+
 def _normalise_query(q: Query, rep: np.ndarray) -> Query:
     pats = [
-        tuple(int(rep[t]) if not is_var(t) else t for t in atom) for atom in q.patterns
+        tuple(_norm_const(t, rep) if not is_var(t) else t for t in atom)
+        for atom in q.patterns
     ]
-    steps = []
-    for s in q.steps:
-        if isinstance(s, FilterEq):
-            # the *comparison value* must NOT be normalised: FILTER compares
-            # concrete resources, hence runs on expanded bindings
-            steps.append(s)
-        else:
-            steps.append(s)
-    return Query(pats, steps, list(q.select), q.distinct)
+    # steps pass through untouched: FILTER comparison values must NOT be
+    # normalised (FILTER compares concrete resources, hence runs on
+    # expanded bindings), and builtins operate on expanded resources too
+    return Query(pats, list(q.steps), list(q.select), q.distinct)
 
 
 def _match_bgp(patterns, triples: np.ndarray):
@@ -83,20 +97,26 @@ class _Solutions:
         self.expanded.add(v)
 
 
+def _rho_view(rep) -> FrozenRho:
+    return rep if isinstance(rep, FrozenRho) else FrozenRho(rep)
+
+
 def evaluate(
     q: Query,
     triples: np.ndarray,
-    rep: np.ndarray,
+    rep,
     dic,
 ) -> Counter:
     """Bag of answers: Counter mapping answer tuples (ordered by q.select).
 
     Answer atoms are resource names (via ``dic``) for resource vars and raw
-    strings for builtin-produced vars.
+    strings for builtin-produced vars.  ``rep`` is a representative array or
+    a :class:`~repro.core.uf.FrozenRho` view.
     """
-    rep = compress_np(rep)
-    members = clique_members(rep)
-    sizes = clique_sizes(rep)
+    rho = _rho_view(rep)
+    rep = rho.rep
+    members = rho.members
+    sizes = rho.sizes
     qn = _normalise_query(q, rep)
 
     sol = _Solutions(_match_bgp(qn.patterns, triples))
@@ -142,11 +162,28 @@ def evaluate(
     return out
 
 
-def evaluate_naive(q: Query, triples: np.ndarray, rep: np.ndarray, dic) -> Counter:
+def evaluate_at(q: Query, snapshot, dic, naive: bool = False):
+    """Answer ``q`` against an epoch-consistent snapshot handle.
+
+    ``snapshot`` is any object with ``triples`` (host copy of the live
+    normal-form store at some completed maintenance epoch), ``rho`` (a
+    :class:`~repro.core.uf.FrozenRho`) and ``epoch`` — canonically
+    :class:`repro.core.engine_jax.StoreSnapshot`.  Returns
+    ``(answers, epoch)``: the executor never touches the live arena, so a
+    maintenance operation in flight on the owning state cannot leak a
+    mid-round store into the answer (the ``as_of_epoch`` contract of
+    :mod:`repro.serve.triple_store`).
+    """
+    fn = evaluate_naive if naive else evaluate
+    return fn(q, snapshot.triples, snapshot.rho, dic), snapshot.epoch
+
+
+def evaluate_naive(q: Query, triples: np.ndarray, rep, dic) -> Counter:
     """The incorrect strategy (paper §5): evaluate rho(Q) on T, run builtins
     on representatives, project, then post-hoc expand the answer set."""
-    rep = compress_np(rep)
-    members = clique_members(rep)
+    rho = _rho_view(rep)
+    rep = rho.rep
+    members = rho.members
     qn = _normalise_query(q, rep)
     sol = _Solutions(_match_bgp(qn.patterns, triples))
     for step in qn.steps:
@@ -154,7 +191,7 @@ def evaluate_naive(q: Query, triples: np.ndarray, rep: np.ndarray, dic) -> Count
             names = [dic.lookup(int(x)) for x in sol.cols[step.src]]
             sol.strs[step.dst] = [n.lstrip(":") for n in names]
         elif isinstance(step, FilterEq):
-            keep = np.flatnonzero(sol.cols[step.var] == int(rep[step.value]))
+            keep = np.flatnonzero(sol.cols[step.var] == _norm_const(step.value, rep))
             sol.take(keep)
     out: Counter = Counter()
     keep_vars = list(qn.select)

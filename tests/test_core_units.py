@@ -8,11 +8,13 @@ from repro.core.rules import Program, Rule, parse_program, parse_rule
 from repro.core.terms import Dictionary, SAME_AS, var
 from repro.core.triples import TripleArena, pack, unpack
 from repro.core.uf import (
+    FrozenRho,
     clique_members,
     clique_sizes,
     compress_np,
     merge_pairs_jax,
     merge_pairs_np,
+    split_cliques,
 )
 
 
@@ -108,6 +110,78 @@ def test_union_find_jax_matches_np():
             )
         )
         assert (compress_np(rep_j) == rep_np).all(), trial
+
+
+def test_split_cliques_semantics_pinned():
+    """Regression pin for the serving refactor: suspect representatives (and
+    only representatives) revert their whole clique to singletons; everything
+    else — non-roots, singletons, empty suspect sets — is a no-op."""
+    rep = compress_np(np.array([0, 0, 0, 3, 3, 5], np.int32))
+    out = split_cliques(rep, np.array([0]))
+    assert out.tolist() == [0, 1, 2, 3, 3, 5]
+    assert rep.tolist() == [0, 0, 0, 3, 3, 5]  # input untouched (copy)
+    # a non-representative member names no clique: no-op
+    assert split_cliques(rep, np.array([1])).tolist() == rep.tolist()
+    # a singleton representative: no-op
+    assert split_cliques(rep, np.array([5])).tolist() == rep.tolist()
+    # empty suspect set: no-op (identity object semantics not required)
+    assert split_cliques(rep, np.zeros(0, np.int64)).tolist() == rep.tolist()
+    # splitting every clique yields the identity map
+    assert split_cliques(rep, np.array([0, 3])).tolist() == list(range(6))
+
+
+def test_epoch_ok_tombstone_visibility_pinned():
+    """Regression pin for the serving refactor: the tombstone predicates
+    match the PRE-deletion store (tombstoned rows stay join candidates, like
+    DRed matching deleted facts against T), while the forward predicates
+    ignore ``tomb`` entirely and see only live epochs."""
+    import jax.numpy as jnp
+
+    from repro.core.engine_jax import (
+        PRED_ALL,
+        PRED_DELTA,
+        PRED_OLD,
+        PRED_TDELTA,
+        PRED_TSTORE,
+        _epoch_ok,
+    )
+
+    # rows: free, old live, marked, tombstoned wave 1, fresh live
+    epoch = jnp.asarray([-1, 0, 1, 2, 2])
+    marked = jnp.asarray([False, False, True, False, False])
+    tomb = jnp.asarray([-1, 0, 1, 1, -1])
+    r = 2
+
+    def ok(pred):
+        return np.asarray(_epoch_ok(epoch, marked, tomb, r, pred)).tolist()
+
+    # pre-deletion store: every unmarked, allocated row — INCLUDING rows
+    # already tombstoned this pass
+    assert ok(PRED_TSTORE) == [False, True, False, True, True]
+    # wave delta: tombstoned exactly in wave r-1
+    assert ok(PRED_TDELTA) == [False, False, False, True, False]
+    # forward discipline is blind to tombstones (the tomb==-1 invariant is
+    # restored before any forward round runs)
+    assert ok(PRED_OLD) == [False, True, False, False, False]
+    assert ok(PRED_DELTA) == [False, False, False, False, False]  # row 2 marked
+    assert ok(PRED_ALL) == [False, True, False, False, False]
+
+
+def test_frozen_rho_view_matches_uf_helpers():
+    raw = np.array([0, 0, 1, 3, 3, 5], np.int32)  # 2 -> 1 -> 0 chain
+    fr = FrozenRho(raw)
+    ref = compress_np(raw)
+    assert (fr.rep == ref).all()
+    assert not fr.rep.flags.writeable
+    assert (fr.sizes == clique_sizes(ref)).all()
+    want_members = clique_members(ref)
+    assert set(fr.members) == set(want_members)
+    for k, v in want_members.items():
+        assert fr.members[k].tolist() == v.tolist()
+    # the expansion tables are cached, not recomputed per query
+    assert fr.members is fr.members and fr.sizes is fr.sizes
+    assert fr.normalise(np.array([2, 4])).tolist() == [0, 3]
+    assert len(fr) == 6
 
 
 def test_rule_parse_and_rewrite():
