@@ -10,16 +10,82 @@
                                      epochs; writes BENCH_serve.json)
 
 ``python -m benchmarks.run [section ...]`` — default: all sections.
+
+``python -m benchmarks.run --check [tolerance]`` — regression gate: rerun
+the incremental section (without overwriting the JSON) and exit non-zero if
+any dataset's ``speedup_engine_vs_scratch`` regressed more than
+``tolerance`` (default 0.2 = 20%) below the committed
+BENCH_incremental.json baseline.
 """
 
 from __future__ import annotations
 
+import json
+import os
 import sys
 import time
 
+BASELINE = os.path.join(
+    os.path.dirname(os.path.dirname(os.path.abspath(__file__))),
+    "BENCH_incremental.json",
+)
+
+
+def compare_incremental(
+    rows: list[dict], baseline_doc: dict, tolerance: float = 0.2
+) -> list[str]:
+    """Regressions of ``speedup_engine_vs_scratch`` vs a baseline doc.
+
+    Returns one message per dataset whose fresh speedup fell more than
+    ``tolerance`` (fractional) below the committed value; datasets missing
+    from either side, or with null speedups on the baseline side, are
+    skipped.  Pure so the tier-1 bench smoke can pin the gate's semantics
+    without timing anything.
+    """
+    base = {
+        r["dataset"]: r.get("speedup_engine_vs_scratch")
+        for r in baseline_doc.get("rows", [])
+    }
+    problems = []
+    for r in rows:
+        want = base.get(r["dataset"])
+        got = r.get("speedup_engine_vs_scratch")
+        if want is None:
+            continue
+        if got is None or got < want * (1.0 - tolerance):
+            problems.append(
+                f"{r['dataset']}: speedup_engine_vs_scratch {got} < "
+                f"baseline {want} - {int(tolerance * 100)}%"
+            )
+    return problems
+
+
+def check(tolerance: float = 0.2) -> int:
+    """Run the incremental bench and gate it against the committed JSON."""
+    from benchmarks import bench_incremental
+
+    if not os.path.exists(BASELINE):
+        print(f"[check] no baseline at {BASELINE}; nothing to gate against")
+        return 0
+    with open(BASELINE) as fh:
+        baseline_doc = json.load(fh)
+    rows = bench_incremental.main(out_json=None)
+    problems = compare_incremental(rows, baseline_doc, tolerance)
+    if problems:
+        print("[check] FAIL: engine-vs-scratch speedup regressed")
+        for p in problems:
+            print("  -", p)
+        return 1
+    print(f"[check] OK: no dataset regressed >{int(tolerance * 100)}% vs baseline")
+    return 0
+
 
 def main() -> None:
-    sections = sys.argv[1:] or [
+    argv = sys.argv[1:]
+    if argv and argv[0] == "--check":
+        tol = float(argv[1]) if len(argv) > 1 else 0.2
+        raise SystemExit(check(tol))
+    sections = argv or [
         "materialisation", "scaling", "sparql", "kernels", "incremental",
         "serve",
     ]

@@ -11,8 +11,14 @@ Design (DESIGN.md §2):
     paper's outdated bit; marked facts are skipped by matching but retained),
   * delta discipline via epochs: round r matches Delta = (epoch == r-1),
     T_old = (epoch <= r-2), T_all = (epoch <= r-1),
-  * joins  = sort + searchsorted over packed int64 keys with static output
-    capacities and overflow flags (host retries with doubled capacity),
+  * joins  = sort the (small) binding table + searchsorted over packed int64
+    keys with static output capacities and overflow flags (host retries with
+    doubled capacity) — the arena itself is never sorted inside a round,
+  * index  = a persistent sorted view of each shard's live arena rows
+    (``EngineState.sort_perm``/``sorted_keys``), built once and maintained
+    incrementally: fresh rows rank-merge in (:mod:`repro.kernels.merge`),
+    swept/finalised rows leave via a stable partition, and a full argsort
+    happens at most once per mutation epoch (capacity growth / adoption),
   * rho    = replicated representative array; merges via
     :func:`repro.core.uf.merge_pairs_jax` (min-hooking + pointer doubling),
   * rule rewriting happens on the host at the round barrier; rule *constants*
@@ -46,6 +52,8 @@ import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
 from repro.compat import shard_map as compat_shard_map
+
+from repro.kernels.merge import merge_sorted
 
 from .rules import Program, Rule
 from .stats import MatStats
@@ -121,17 +129,43 @@ def _match_atom(spo, ok, consts, const_mask, eq_pairs):
 def _compact(cols: dict, valid: jnp.ndarray, cap: int):
     """Pack valid rows to the front, truncating (or padding) at ``cap``.
 
-    Output rows beyond ``n_valid`` hold garbage and must stay masked by the
-    returned validity — when ``cap`` exceeds the input length the tail
-    repeats the last input row, masked the same way.
+    A stable partition *without sorting*: output slot ``j`` gathers the
+    ``(j+1)``-th valid row, found by binary search over the inclusive
+    cumsum of ``valid`` — one O(cap log n) search plus gathers, instead of
+    an input-length scatter per column.  Invalid rows — and valid rows past
+    ``cap``, which raise the overflow flag — are simply never gathered.
+    Output rows beyond ``n_valid`` hold zeros and must stay masked by the
+    returned validity.
     """
-    order = jnp.argsort(~valid, stable=True)
-    order = order[jnp.clip(jnp.arange(cap), 0, valid.shape[0] - 1)]
-    n_valid = valid.sum()
-    out_valid = jnp.arange(cap) < n_valid
-    out_cols = {v: c[order] for v, c in cols.items()}
+    cum = jnp.cumsum(valid)
+    n_valid = cum[-1]
+    j = jnp.arange(cap)
+    src = jnp.clip(
+        jnp.searchsorted(cum, j + 1, side="left"), 0, valid.shape[0] - 1
+    )
+    out_valid = j < n_valid
+    out_cols = {v: jnp.where(out_valid, c[src], 0) for v, c in cols.items()}
     overflow = n_valid > cap
     return out_cols, out_valid, overflow
+
+
+def _index_remove(sort_perm, sorted_keys, dead, trash):
+    """Drop rows flagged ``dead`` from the sorted arena index.
+
+    A stable partition of the surviving entries (cumsum + binary-searched
+    gather, no sort — survivors keep their relative, hence sorted, order);
+    freed tail slots revert to the ``trash`` row / KEY_MAX padding.
+    """
+    C = sorted_keys.shape[0]
+    keep = (sorted_keys < KEY_MAX) & ~dead[sort_perm]
+    cum = jnp.cumsum(keep)
+    src = jnp.clip(
+        jnp.searchsorted(cum, jnp.arange(C) + 1, side="left"), 0, C - 1
+    )
+    ok = jnp.arange(C) < cum[-1]
+    new_perm = jnp.where(ok, sort_perm[src], trash)
+    new_keys = jnp.where(ok, sorted_keys[src], KEY_MAX)
+    return new_perm, new_keys
 
 
 def _expand_join(cols, valid, spo, ok, bound_items, free_items, out_cap):
@@ -139,6 +173,15 @@ def _expand_join(cols, valid, spo, ok, bound_items, free_items, out_cap):
 
     bound_items: list of (var, atom_pos) already present in ``cols``.
     free_items:  list of (var, atom_pos) newly bound by this atom.
+
+    The *binding table* (bind_cap rows) is sorted — never the arena: each
+    ok store row counts its matching bindings by searchsorted, and the
+    output enumerates (store row, binding) pairs store-major.  Invalid
+    bindings are excluded by explicit mask logic, not a key sentinel: their
+    keys are forced to KEY_MAX and KEY_MAX store keys are excluded from
+    counting (KEY_MAX packs only the all-max-ID triple, above ``MAX_ID`` —
+    the former ``KEY_MAX - 1`` probe sentinel aliased a representable key
+    at the 21-bit ID boundary).
     """
     if bound_items:
         skey = _pack_cols([spo[:, pos] for _, pos in bound_items])
@@ -146,24 +189,25 @@ def _expand_join(cols, valid, spo, ok, bound_items, free_items, out_cap):
     else:
         skey = jnp.zeros(spo.shape[0], dtype=jnp.int64)
         bkey = jnp.zeros(valid.shape[0], dtype=jnp.int64)
-    skey = jnp.where(ok, skey, KEY_MAX)
-    order = jnp.argsort(skey)
-    skey_s = skey[order]
-    bkey = jnp.where(valid, bkey, KEY_MAX - 1)
-    lo = jnp.searchsorted(skey_s, bkey, side="left")
-    hi = jnp.searchsorted(skey_s, bkey, side="right")
-    counts = jnp.where(valid, hi - lo, 0)
+    bkey = jnp.where(valid, bkey, KEY_MAX)
+    border = jnp.argsort(bkey)  # bind_cap-sized — the arena is never sorted
+    bkey_s = bkey[border]
+    # unrolled binary search: the arena-length query side makes the scan
+    # loop's per-step dispatch the dominant cost on CPU
+    lo = jnp.searchsorted(bkey_s, skey, side="left", method="scan_unrolled")
+    hi = jnp.searchsorted(bkey_s, skey, side="right", method="scan_unrolled")
+    counts = jnp.where(ok & (skey != KEY_MAX), hi - lo, 0)
     cum = jnp.cumsum(counts) - counts  # exclusive
     total = counts.sum()
     j = jnp.arange(out_cap)
     seg = jnp.searchsorted(cum, j, side="right") - 1
-    seg = jnp.clip(seg, 0, valid.shape[0] - 1)
+    seg = jnp.clip(seg, 0, spo.shape[0] - 1)
     within = j - cum[seg]
-    srow = order[jnp.clip(lo[seg] + within, 0, spo.shape[0] - 1)]
+    brow = border[jnp.clip(lo[seg] + within, 0, valid.shape[0] - 1)]
     out_valid = j < total
-    new_cols = {v: jnp.where(out_valid, cols[v][seg], 0) for v in cols}
+    new_cols = {v: jnp.where(out_valid, cols[v][brow], 0) for v in cols}
     for v, pos in free_items:
-        new_cols[v] = jnp.where(out_valid, spo[srow, pos], 0)
+        new_cols[v] = jnp.where(out_valid, spo[seg, pos], 0)
     return new_cols, out_valid, total > out_cap, total
 
 
@@ -178,6 +222,43 @@ class _AtomSpec:
     free_items: tuple[tuple[int, int], ...]
     pred: int
     count_appl: bool = False  # this atom feeds the 'Rule appl.' counter
+
+
+def _index_prefix(spec: _AtomSpec):
+    """Static test: can this atom's join run as persistent-index range scans?
+
+    True when the atom's *fixed* positions (constants + already-bound
+    variables, including equality duplicates of bound variables) form a
+    prefix of (s, p, o) — the packed-key order of the shared arena index —
+    so each binding's matches are one contiguous key range.  Returns
+    ``(k, components)`` with ``k`` the prefix length and ``components`` the
+    per-position value source (``("const", pos)`` or ``("var", var_id)``),
+    or ``(None, None)`` when the join must fall back to the generic path.
+    """
+    pos_src: dict[int, tuple] = {}
+    for v, p in spec.bound_items:
+        pos_src[p] = ("bound", v)
+    for v, p in spec.free_items:
+        pos_src[p] = ("free", v)
+    for a, b in spec.eq_pairs:
+        if a in pos_src:
+            pos_src[b] = pos_src[a]
+    fixed = [
+        spec.const_mask[p] or pos_src.get(p, ("free",))[0] == "bound"
+        for p in range(3)
+    ]
+    k = 0
+    while k < 3 and fixed[k]:
+        k += 1
+    if k == 0 or any(fixed[k:]):
+        return None, None
+    comp = []
+    for p in range(k):
+        if spec.const_mask[p]:
+            comp.append(("const", p))
+        else:
+            comp.append(("var", pos_src[p][1]))
+    return k, tuple(comp)
 
 
 def _atom_static(atom, bound_vars: set[int]):
@@ -226,6 +307,60 @@ def build_plans(
             bound |= {v for v, _ in b} | {v for v, _ in f}
         plans.append(specs)
     return plans
+
+
+def _expand_join_index(
+    cols, valid, spo, epoch, marked, tomb, r, sorted_keys, sort_perm,
+    consts, spec: "_AtomSpec", k: int, comp: tuple, out_cap: int,
+):
+    """Index-backed variant of :func:`_expand_join` for prefix-key atoms.
+
+    Each binding's matches in the live store are one contiguous range of
+    the persistent sorted index (``[pack(prefix, 0..), pack(prefix, max..)]``),
+    so the join is two ``searchsorted`` calls *per binding table* plus the
+    output enumeration — O(bind log C + out) with no arena-length
+    intermediate at all.  Only used for predicates satisfied by every live
+    row (PRED_ALL at evaluation round, PRED_TSTORE), so range counts are
+    exact up to intra-atom equality duplicates, which the post-filter
+    clears (they only cost masked output slots, never correctness).
+    """
+    maxid = jnp.int64((1 << 21) - 1)
+    lo_parts, hi_parts = [], []
+    for p in range(3):
+        if p < k:
+            src, ref = comp[p]
+            if src == "const":
+                col = jnp.broadcast_to(
+                    consts[ref].astype(jnp.int64), valid.shape
+                )
+            else:
+                col = cols[ref].astype(jnp.int64)
+            lo_parts.append(col)
+            hi_parts.append(col)
+        else:
+            lo_parts.append(jnp.zeros(valid.shape, jnp.int64))
+            hi_parts.append(jnp.broadcast_to(maxid, valid.shape))
+    lokey = _pack_cols(lo_parts)
+    hikey = _pack_cols(hi_parts)
+    lo = jnp.searchsorted(sorted_keys, lokey, side="left")
+    hi = jnp.searchsorted(sorted_keys, hikey, side="right")
+    counts = jnp.where(valid, jnp.maximum(hi - lo, 0), 0)
+    cum = jnp.cumsum(counts) - counts  # exclusive
+    total = counts.sum()
+    j = jnp.arange(out_cap)
+    seg = jnp.searchsorted(cum, j, side="right") - 1
+    seg = jnp.clip(seg, 0, valid.shape[0] - 1)
+    within = j - cum[seg]
+    srow = sort_perm[jnp.clip(lo[seg] + within, 0, sort_perm.shape[0] - 1)]
+    out_valid = j < total
+    rows = spo[srow]
+    okr = _epoch_ok(epoch[srow], marked[srow], tomb[srow], r, spec.pred)
+    okr = _match_atom(rows, okr, consts, spec.const_mask, spec.eq_pairs)
+    out_valid = out_valid & okr
+    new_cols = {v: jnp.where(out_valid, cols[v][seg], 0) for v in cols}
+    for v, pos in spec.free_items:
+        new_cols[v] = jnp.where(out_valid, rows[:, pos], 0)
+    return new_cols, out_valid, total > out_cap
 
 
 def _gather(x, axis):
@@ -289,6 +424,8 @@ def eval_plan(
     epoch,
     marked,
     tomb,
+    sorted_keys,
+    sort_perm,
     r,
     atom_consts,  # (n_atoms, 3) traced rule constants (vars hold garbage 0)
     head_consts,  # (3,) traced
@@ -304,21 +441,41 @@ def eval_plan(
     shard; bindings are all_gathered between atoms so every shard sees the
     global binding table.  The final join's results stay local — their union
     over shards is the global candidate set.
+
+    Atoms whose fixed positions form a packed-key prefix and whose
+    predicate admits every live row (PRED_ALL / PRED_TSTORE) join through
+    the persistent sorted index (:func:`_expand_join_index`) — range scans
+    instead of any arena-length intermediate; the rest take the generic
+    bindings-sorting join.
     """
     cols: dict[int, jnp.ndarray] = {}
     valid = jnp.ones((1,), dtype=bool)  # the unit binding
     n_appl = jnp.zeros((), I32)
     overflow = jnp.zeros((), bool)
     for step, spec in enumerate(plan):
-        ok = _epoch_ok(epoch, marked, tomb, r, spec.pred)
-        ok = _match_atom(spo, ok, atom_consts[spec.index], spec.const_mask, spec.eq_pairs)
-        if spec.count_appl:
-            n_appl = n_appl + ok.sum().astype(I32)
-        if step == 0 and not spec.bound_items:
+        is_join = not (step == 0 and not spec.bound_items)
+        k, comp = (None, None)
+        if is_join and spec.pred in (PRED_ALL, PRED_TSTORE):
+            k, comp = _index_prefix(spec)
+        if k is None or spec.count_appl:
+            ok = _epoch_ok(epoch, marked, tomb, r, spec.pred)
+            ok = _match_atom(
+                spo, ok, atom_consts[spec.index], spec.const_mask, spec.eq_pairs
+            )
+            if spec.count_appl:
+                n_appl = n_appl + ok.sum().astype(I32)
+        if not is_join:
             # initial scan: bindings = matching rows directly (no join needed)
             cols = {v: jnp.where(ok, spo[:, p], 0) for v, p in spec.free_items}
             valid = ok
             cols, valid, ov = _compact(cols, valid, bind_cap)
+            overflow |= ov
+        elif k is not None:
+            cols, valid, ov = _expand_join_index(
+                cols, valid, spo, epoch, marked, tomb, r,
+                sorted_keys, sort_perm,
+                atom_consts[spec.index], spec, k, comp, bind_cap,
+            )
             overflow |= ov
         else:
             cols, valid, ov, _ = _expand_join(
@@ -353,6 +510,8 @@ def process_candidates(
     marked,
     n_used,
     rep,
+    sort_perm,
+    sorted_keys,
     cands,
     cand_valid,
     r,
@@ -364,6 +523,12 @@ def process_candidates(
 ):
     """Normalise, merge equalities, sweep, insert — the state-update half of a
     round (Algorithms 3-6 in bulk).  Pure; runs per-shard under shard_map.
+
+    ``sort_perm``/``sorted_keys`` is the persistent sorted index of the
+    shard's live rows; it is consumed by the membership probe and returned
+    up to date — swept rows leave via a stable partition, fresh rows (whose
+    keys the dedup step already sorted) rank-merge in.  No step here sorts
+    the arena.
 
     Under SPMD there are two exchange schemes:
 
@@ -417,17 +582,35 @@ def process_candidates(
     # 3) re-normalise candidates under the new rho
     cands = jnp.where(cand_valid[:, None], rep[cands], 0).astype(I32)
 
-    # 4) sweep the local store shard (bulk Algorithm 3)
+    # 4) sweep the local store shard (bulk Algorithm 3).  Most steady-state
+    # rounds sweep nothing (rho unchanged), so the compaction and the index
+    # partition sit behind a ``cond`` — XLA only runs the taken branch,
+    # turning the arena-wide scatter work into a no-op on quiet rounds.
     live = (epoch >= 0) & ~marked
     rewritten = rep[spo].astype(I32)
     changed = live & jnp.any(rewritten != spo, axis=1)
     marked = marked | changed
-    rw_cols, rw_valid, rw_overflow = _compact(
-        {"s": rewritten[:, 0], "p": rewritten[:, 1], "o": rewritten[:, 2]},
-        changed,
-        rewrite_cap,
+
+    def _do_sweep(_):
+        rw_cols, rw_valid, rw_overflow = _compact(
+            {"s": rewritten[:, 0], "p": rewritten[:, 1], "o": rewritten[:, 2]},
+            changed,
+            rewrite_cap,
+        )
+        rw = jnp.stack([rw_cols["s"], rw_cols["p"], rw_cols["o"]], axis=1)
+        # swept rows leave the persistent index (stable partition, no sort)
+        perm, keys = _index_remove(sort_perm, sorted_keys, changed, arena_cap)
+        return rw, rw_valid, rw_overflow, perm, keys
+
+    def _no_sweep(_):
+        return (
+            jnp.zeros((rewrite_cap, 3), I32), jnp.zeros((rewrite_cap,), bool),
+            jnp.zeros((), bool), sort_perm, sorted_keys,
+        )
+
+    rw, rw_valid, rw_overflow, sort_perm, sorted_keys = jax.lax.cond(
+        changed.any(), _do_sweep, _no_sweep, 0
     )
-    rw = jnp.stack([rw_cols["s"], rw_cols["p"], rw_cols["o"]], axis=1)
     if axis is not None and not routed:
         rw = _gather(rw, axis)
         rw_valid = _gather(rw_valid, axis)
@@ -480,13 +663,10 @@ def process_candidates(
     uniq = jnp.concatenate([jnp.asarray([True]), sk[1:] != sk[:-1]])
     uniq = uniq & (sk < KEY_MAX)
 
-    # 8) membership against live local store rows
-    live = (epoch >= 0) & ~marked
-    store_keys = jnp.where(live, _pack3(spo), KEY_MAX)
-    sorder = jnp.argsort(store_keys)
-    sks = store_keys[sorder]
-    pos = jnp.searchsorted(sks, sk)
-    member = sks[jnp.clip(pos, 0, spo.shape[0] - 1)] == sk
+    # 8) membership against live local store rows: probe the persistent
+    # sorted index instead of re-sorting the arena
+    pos = jnp.clip(jnp.searchsorted(sorted_keys, sk), 0, sorted_keys.shape[0] - 1)
+    member = sorted_keys[pos] == sk
     fresh = uniq & ~member
 
     # 9) scatter fresh rows into free local slots
@@ -502,23 +682,50 @@ def process_candidates(
     epoch = epoch.at[arena_cap].set(-1)
     n_used = n_used + n_fresh
 
+    # 9b) merge the fresh delta into the sorted index: ``sk`` is ascending,
+    # so compacting the fresh (key, slot, row) tuples (stable, no sort)
+    # yields a sorted delta that rank-merges into the index in O(C) gather
+    # work — the full-arena argsort this replaces was the round loop's
+    # single biggest cost on sort-bound backends.  Like the sweep above,
+    # the merge sits behind a ``cond`` so rounds that inserted nothing
+    # (every operation's final convergence round) skip the arena-length
+    # work entirely.
+    dcols, dvalid, _ = _compact(
+        {
+            "k": sk, "v": tgt.astype(I32),
+            "s": rows[:, 0], "p": rows[:, 1], "o": rows[:, 2],
+        },
+        fresh, sk.shape[0],
+    )
+
+    def _do_merge(_):
+        d_keys = jnp.where(dvalid, dcols["k"], KEY_MAX)
+        d_vals = jnp.where(dvalid, dcols["v"], arena_cap).astype(I32)
+        return merge_sorted(
+            sorted_keys, sort_perm, d_keys, d_vals,
+            out_len=sorted_keys.shape[0],
+        )
+
+    sorted_keys, sort_perm = jax.lax.cond(
+        n_fresh > 0, _do_merge, lambda _: (sorted_keys, sort_perm), 0
+    )
+
     # reflexive-added stat: fresh rows originating from the reflexivity step
     is_refl = fresh & stream_refl[order]
     n_refl = is_refl.sum().astype(I32)
 
-    # per-position resource masks of the fresh delta: the host driver skips
-    # every delta plan whose delta atom's constants are incompatible (the
-    # bulk analogue of the numpy engine's delta-first dead-plan elimination)
-    fm = []
-    for pos in range(3):
-        fm.append(
-            jnp.zeros(rep.shape[0], bool).at[
-                jnp.where(fresh, rows[:, pos], 0)
-            ].max(fresh)
-        )
-    fresh_masks = jnp.stack(fm)  # (3, n_res)
-    if axis is not None:
-        fresh_masks = jax.lax.psum(fresh_masks.astype(I32), axis) > 0
+    # the compacted fresh delta rides back to the host, which derives the
+    # per-position resource masks for dead-plan elimination there — a few
+    # delta rows of numpy work instead of per-round arena-length scatters
+    # and a psum on the device.  Truncated to a bounded width so the
+    # per-round device-to-host transfer never scales with a wide padded
+    # stream; on overflow (n_new exceeds the window) the host falls back
+    # to all-True masks, which skip nothing and stay sound.
+    d_window = min(sk.shape[0], 4096)
+    delta_rows = jnp.stack(
+        [dcols["s"][:d_window], dcols["p"][:d_window], dcols["o"][:d_window]],
+        axis=1,
+    )
 
     flags = {
         "rep_changed": rep_changed,
@@ -531,13 +738,50 @@ def process_candidates(
         "n_pairs": n_pairs,
         "n_marked": changed.sum().astype(I32)[None],
         "n_reflexive": n_refl[None],
-        "fresh_masks": fresh_masks,
+        "delta_rows": delta_rows,
+        "delta_valid": dvalid[:d_window],
     }
-    return spo, epoch, marked, n_used[None], rep, flags
+    return spo, epoch, marked, n_used[None], rep, sort_perm, sorted_keys, flags
 
 
 class CapacityError(RuntimeError):
     pass
+
+
+def index_invariant_report(state: "EngineState", n_shards: int = 1) -> list[str]:
+    """Violations of the persistent-index invariant (empty == healthy).
+
+    Per shard block: ``sorted_keys`` must hold exactly the packed keys of
+    the live rows, sorted ascending, as a prefix followed by KEY_MAX
+    padding, and ``sort_perm``'s prefix must enumerate exactly those rows.
+    Host-side diagnostic shared by the invariant fuzz tests and debugging;
+    states whose index is marked dirty (pending rebuild) are reported as
+    such rather than checked.
+    """
+    from .triples import pack  # host-side numpy packing (same bit layout)
+
+    if state.index_dirty:
+        return ["index_dirty: rebuild pending"]
+    probs: list[str] = []
+    spo = np.asarray(state.spo).reshape(n_shards, -1, 3)
+    epoch = np.asarray(state.epoch).reshape(n_shards, -1)
+    marked = np.asarray(state.marked).reshape(n_shards, -1)
+    keys = np.asarray(state.sorted_keys).reshape(n_shards, -1)
+    perm = np.asarray(state.sort_perm).reshape(n_shards, -1)
+    for s in range(n_shards):
+        live = (epoch[s] >= 0) & ~marked[s]
+        want = np.sort(pack(spo[s][live]))
+        n = want.shape[0]
+        if not (keys[s][n:] == KEY_MAX).all():
+            probs.append(f"shard {s}: non-sentinel entries beyond live prefix")
+        if not np.array_equal(keys[s][:n], want):
+            probs.append(f"shard {s}: sorted_keys != sort(pack3(live rows))")
+        if not np.array_equal(np.sort(perm[s][:n]), np.flatnonzero(live)):
+            probs.append(f"shard {s}: sort_perm prefix is not the live row set")
+        got = pack(spo[s][perm[s][:n]])
+        if not np.array_equal(got, keys[s][:n]):
+            probs.append(f"shard {s}: sort_perm rows disagree with sorted_keys")
+    return probs
 
 
 @dataclass
@@ -550,6 +794,19 @@ class EngineState:
     so the delta discipline of :func:`_epoch_ok` carries over unchanged.
     ``tomb`` is -1 everywhere except inside a delete operation's backward
     pass (see :mod:`repro.core.incremental_spmd`).
+
+    ``sort_perm``/``sorted_keys`` is the **persistent sorted arena index**:
+    per shard block, ``sorted_keys`` holds the packed int64 keys of exactly
+    the live (``epoch >= 0 & ~marked``) rows in ascending order (KEY_MAX
+    padding behind) and ``sort_perm`` the local row index of each entry.
+    Every membership probe — store insertion, tombstone seeding/waves,
+    rederive seeds, serving snapshots — binary-searches this shared view;
+    it is maintained *incrementally* (rank-merge on insert, stable
+    partition on sweep/finalize), so the arena is argsorted at most once
+    per mutation epoch: ``index_dirty`` marks the rare rebuild points
+    (capacity growth re-layout) and
+    :meth:`JaxEngine._ensure_index` pays the sort lazily at the next
+    operation's start.
     """
 
     spo: jnp.ndarray
@@ -558,6 +815,8 @@ class EngineState:
     tomb: jnp.ndarray
     n_used: jnp.ndarray
     rep: jnp.ndarray
+    sort_perm: jnp.ndarray
+    sorted_keys: jnp.ndarray
     program: Program
     base_program: Program
     explicit: np.ndarray
@@ -568,6 +827,9 @@ class EngineState:
     # (the per-round delta discipline): readers version themselves on this,
     # and it only ever advances at an epoch barrier — never mid-operation.
     update_epoch: int = 0
+    # True when sort_perm/sorted_keys no longer describe the arena (set on
+    # capacity re-layout); cleared by JaxEngine._ensure_index
+    index_dirty: bool = False
 
     @property
     def n_res(self) -> int:
@@ -640,10 +902,35 @@ class JaxEngine:
         # buffers than full-evaluation plans — the candidate stream (and its
         # sorts) then scales with the update's blast radius, not with the
         # base fixpoint's worst round.  The base run itself uses ``out_cap``
-        # for every plan (its early deltas are dataset-sized).
+        # for every plan (its early deltas are dataset-sized).  The same
+        # narrowing applies to the join binding table (``delta_bind``) and
+        # the sweep rewrite buffer (``delta_rewrite``): with the persistent
+        # index covering membership, these padded widths are what is left
+        # of the arena-proportional per-round cost.
         self.delta_out = delta_out_cap or min(out_cap, max(1 << 12, out_cap >> 4))
+        # bind holds JOIN INTERMEDIATES, which on rule-heavy programs exceed
+        # the delta long before the candidate stream does — its floor is one
+        # notch higher so typical updates never pay a growth retry
+        self.delta_bind = min(bind_cap, max(1 << 13, bind_cap >> 4))
+        self.delta_rewrite = min(rewrite_cap, max(1 << 11, rewrite_cap >> 4))
         self._active_delta_out = out_cap
         self._active_delta_kind = "out"
+        self._active_bind = bind_cap
+        self._active_bind_kind = "bind"
+        self._active_rewrite = rewrite_cap
+        self._active_rewrite_kind = "rewrite"
+        # an update whose blast radius exceeds a narrow delta buffer retries
+        # with the WIDE (base-run, already-compiled) buffers instead of
+        # rediscovering the right delta width one doubling-plus-recompile at
+        # a time; the named delta cap still doubles once.  The flag is
+        # STICKY across operations — a workload whose updates are
+        # store-scale (clique-split-heavy deletes on small stores) should
+        # not pay a narrow attempt + rollback per op — but every few ops
+        # :meth:`_maybe_reset_fallback` probes narrow again, so one
+        # anomalous giant update cannot degrade a delta-scale stream
+        # permanently.
+        self._delta_fallback = False
+        self._fallback_ops = 0
         self.use_kernel = use_kernel
         self.mesh = mesh
         self.axis = axis if mesh is not None else None
@@ -676,14 +963,24 @@ class JaxEngine:
             )
         )
 
-    def _get_plan_fn(self, plan_key, plan, head_slots, out_cap):
+    # buffer family of each growable cap attr: cache keys tag every cap
+    # value with its family, so eviction after growth is precise even when
+    # two different buffers happen to share a width
+    _CAP_FAMILY = {
+        "bind_cap": "bind", "delta_bind": "bind",
+        "out_cap": "out", "delta_out": "out",
+        "rewrite_cap": "rewrite", "delta_rewrite": "rewrite",
+        "pair_cap": "pair", "route_cap": "route",
+    }
+
+    def _get_plan_fn(self, plan_key, plan, head_slots, bind_cap, out_cap):
         if plan_key not in self._fns:
             a = self.axis
             fn = partial(
                 eval_plan,
                 plan=plan,
                 head_var_slots=head_slots,
-                bind_cap=self.bind_cap,
+                bind_cap=bind_cap,
                 out_cap=out_cap,
                 axis=a,
             )
@@ -691,28 +988,30 @@ class JaxEngine:
             rpl = P() if a else None
             self._fns[plan_key] = self._wrap(
                 fn,
-                in_specs=(d, d, d, d, rpl, rpl, rpl),
+                in_specs=(d, d, d, d, d, d, rpl, rpl, rpl),
                 out_specs=(d, d, d, d, d, d),
             )
         return self._fns[plan_key]
 
-    def _get_squeeze_fn(self, n_rows: int):
-        """Compact a wide bucketed candidate stream down to out_cap rows.
+    def _get_squeeze_fn(self, n_rows: int, target: int):
+        """Compact a wide bucketed candidate stream down to ``target`` rows.
 
-        Rederive rounds can bucket several full-width plan buffers; their
-        valid rows almost always fit one out_cap buffer, and squeezing once
-        is far cheaper than dragging the padded width through the process
-        step's sorts (which touch the stream ~4x after refl expansion).
+        Rounds can bucket several plan buffers (rederive even full-width
+        ones); their valid rows almost always fit one active-width buffer,
+        and squeezing once is far cheaper than dragging the padded width
+        through the process step's sorts (which touch the stream ~4x after
+        refl expansion).  During updates ``target`` is the narrow
+        ``delta_out`` width, so steady-state rounds stream delta-sized
+        buffers end to end.
         """
-        key = ("squeeze", n_rows, self.out_cap)
+        key = ("squeeze", n_rows, ("out", target))
         if key not in self._fns:
             a = self.axis
-            out_cap = self.out_cap
 
             def fn(cands, valid):
                 cols, v, ov = _compact(
                     {"s": cands[:, 0], "p": cands[:, 1], "o": cands[:, 2]},
-                    valid, out_cap,
+                    valid, target,
                 )
                 out = jnp.stack([cols["s"], cols["p"], cols["o"]], axis=1)
                 return out, v, ov[None]
@@ -723,14 +1022,15 @@ class JaxEngine:
 
     def _get_process_fn(self, n_cand_rows: int):
         key = (
-            "process", n_cand_rows, self.rewrite_cap, self.route_cap,
-            self.out_cap, self.pair_cap,
+            "process", n_cand_rows, ("rewrite", self._active_rewrite),
+            ("route", self.route_cap), ("out", self.out_cap),
+            ("pair", self.pair_cap),
         )
         if key not in self._fns:
             a = self.axis
             fn = partial(
                 process_candidates,
-                rewrite_cap=self.rewrite_cap,
+                rewrite_cap=self._active_rewrite,
                 axis=a,
                 n_shards=self.n_shards,
                 route_cap=self.route_cap if a is not None else None,
@@ -749,12 +1049,13 @@ class JaxEngine:
                 "n_pairs": rpl,
                 "n_marked": d,
                 "n_reflexive": d,
-                "fresh_masks": rpl,
+                "delta_rows": d,
+                "delta_valid": d,
             }
             self._fns[key] = self._wrap(
                 fn,
-                in_specs=(d, d, d, d, rpl, d, d, rpl),
-                out_specs=(d, d, d, d, rpl, flag_specs),
+                in_specs=(d, d, d, d, rpl, d, d, d, d, rpl),
+                out_specs=(d, d, d, d, rpl, d, d, flag_specs),
             )
         return self._fns[key]
 
@@ -768,6 +1069,10 @@ class JaxEngine:
             tomb=jnp.full(((cap + 1) * D,), -1, I32),
             n_used=jnp.zeros((D,), I32),
             rep=jnp.arange(self.n_resources, dtype=I32),
+            # a valid index of the empty store: KEY_MAX padding pointing at
+            # each shard's trash row (local index ``cap``)
+            sort_perm=jnp.full(((cap + 1) * D,), cap, I32),
+            sorted_keys=jnp.full(((cap + 1) * D,), KEY_MAX, jnp.int64),
             program=program,
             base_program=program,
             explicit=np.zeros((0, 3), np.int32),
@@ -778,11 +1083,16 @@ class JaxEngine:
         )
 
     def _pad_cands(self, rows: np.ndarray):
-        """Pad a host candidate batch to the global candidate stream shape."""
+        """Pad a host candidate batch to the active candidate stream shape.
+
+        During updates that is the narrow ``delta_out`` width — the whole
+        round then streams delta-sized buffers through the process step —
+        and during the base run the full ``out_cap``.
+        """
         rows = np.asarray(rows, np.int32).reshape(-1, 3)
-        rows_global = self.out_cap * self.n_shards
+        rows_global = self._active_delta_out * self.n_shards
         if rows.shape[0] > rows_global:
-            raise CapacityError("out")
+            raise CapacityError(self._active_delta_kind)
         pad = rows_global - rows.shape[0]
         cands = jnp.asarray(np.pad(rows, ((0, pad), (0, 0))), I32)
         cand_valid = jnp.asarray(np.arange(rows_global) < rows.shape[0])
@@ -791,29 +1101,54 @@ class JaxEngine:
     def _set_update_buffers(self, updating: bool) -> None:
         """Select the output buffer delta/tomb plans emit into.
 
-        During maintenance updates that is the narrow ``delta_out`` buffer;
-        during the base run it is the full ``out_cap`` (early deltas are
-        dataset-sized).  The active *kind* names the capacity a retry must
-        grow — the two buffers can coincide in size, so the label cannot be
-        recovered from the value.
+        During maintenance updates those are the narrow ``delta_out`` /
+        ``delta_bind`` / ``delta_rewrite`` buffers; during the base run —
+        or an update retrying after a delta-buffer overflow
+        (``_delta_fallback``) — the full ``out_cap`` / ``bind_cap`` /
+        ``rewrite_cap`` (base-run widths, so their compiled fns are reused
+        rather than recompiled per doubling).  The active *kind* names the
+        capacity a retry must grow — the buffers can coincide in size, so
+        the label cannot be recovered from the value.
         """
-        self._active_delta_out = self.delta_out if updating else self.out_cap
-        self._active_delta_kind = "delta_out" if updating else "out"
+        narrow = updating and not self._delta_fallback
+        self._active_delta_out = self.delta_out if narrow else self.out_cap
+        self._active_delta_kind = "delta_out" if narrow else "out"
+        self._active_bind = self.delta_bind if narrow else self.bind_cap
+        self._active_bind_kind = "delta_bind" if narrow else "bind"
+        self._active_rewrite = self.delta_rewrite if narrow else self.rewrite_cap
+        self._active_rewrite_kind = "delta_rewrite" if narrow else "rewrite"
 
-    def _evict_stale_fns(self, old_values: set) -> None:
+    def _evict_stale_fns(self, grew: set) -> None:
         """Drop compiled fns (and padbuf device buffers) that baked an
-        outgrown capacity.  Cache keys embed the cap values they were built
-        with, so a value match over the key tuples identifies every stale
-        entry; a coincidental match merely costs one recompile, while
-        keeping stale entries would retain their XLA executables for the
-        engine's (a standing service's) lifetime."""
+        outgrown capacity.  ``grew`` holds ``(family, old_value)`` pairs
+        and cache keys tag every cap with its buffer family, so eviction
+        is precise: growing ``bind`` no longer evicts every fn that merely
+        mentions an *equal* ``out`` width — the collateral recompile storm
+        that used to follow a mid-stream growth.  Keys whose widths are
+        *derived* from the caps (padbuf buffers, process/squeeze stream
+        widths) carry bare ints; those are matched by value, since an
+        outgrown width can no longer be produced and would otherwise
+        retain its XLA executable / device buffers for the engine's (a
+        standing service's) lifetime — a coincidental match there merely
+        costs one recompile."""
+        old_values = {v for _, v in grew}
 
-        def hit(x):
+        def hit(x, by_value=False):
             if isinstance(x, tuple):
-                return any(hit(y) for y in x)
-            return isinstance(x, int) and x in old_values
+                if len(x) == 2 and isinstance(x[0], str) and x in grew:
+                    return True
+                return any(hit(y, by_value) for y in x)
+            return by_value and isinstance(x, int) and x in old_values
 
-        for key in [k for k in self._fns if hit(k)]:
+        def stale(key):
+            by_value = (
+                isinstance(key, tuple)
+                and key
+                and key[0] in ("padbuf", "process", "squeeze")
+            )
+            return hit(key, by_value)
+
+        for key in [k for k in self._fns if stale(k)]:
             del self._fns[key]
 
     def _grow_for(self, kind: str) -> None:
@@ -828,30 +1163,48 @@ class JaxEngine:
         """
         grew: set = set()
 
-        def double(attr: str) -> None:
+        def double(attr: str, factor: int = 2) -> None:
             # the arena capacity is not part of any fn cache key (jit
             # re-traces on the new array shapes), so it never marks stale
             if attr != "capacity":
-                grew.add(getattr(self, attr))
-            setattr(self, attr, getattr(self, attr) * 2)
+                grew.add((self._CAP_FAMILY[attr], getattr(self, attr)))
+            setattr(self, attr, getattr(self, attr) * factor)
+
+        # each wide-cap growth mid-update restarts the operation and
+        # recompiles every fn keyed on the outgrown width; once an update
+        # is already in its fallback retry, grow x4 to halve those restarts
+        wide_factor = 4 if self._delta_fallback else 2
 
         if kind == "store":
             double("capacity")
         elif kind == "bind":
-            double("bind_cap")
+            double("bind_cap", wide_factor)
         elif kind in ("out", "out_cap"):
-            double("out_cap")
-        elif kind == "delta_out":
-            double("delta_out")
+            double("out_cap", wide_factor)
         elif kind == "rewrite":
-            double("rewrite_cap")
+            double("rewrite_cap", wide_factor)
+        elif kind in ("delta_out", "delta_bind", "delta_rewrite"):
+            # a delta buffer overflowed: double it for FUTURE updates, but
+            # retry the current one against the wide (base-run, compiled)
+            # buffers — iterative width discovery would recompile every
+            # delta-width fn per doubling.  Clamped at the wide cap: on a
+            # persistently store-scale workload the periodic narrow probe
+            # must not keep doubling (and recompiling) past the width the
+            # wide buffers already provide — all caps are powers of two,
+            # so doubling from below the wide cap never overshoots it.
+            wide = {"delta_out": "out_cap", "delta_bind": "bind_cap",
+                    "delta_rewrite": "rewrite_cap"}[kind]
+            if getattr(self, kind) < getattr(self, wide):
+                double(kind)
+            self._delta_fallback = True
         elif kind == "pair":
             double("pair_cap")
         elif kind == "route" and self.route_cap is not None:
             double("route_cap")
         else:  # unknown kind: grow everything (defensive)
-            for attr in ("capacity", "bind_cap", "out_cap", "delta_out",
-                         "rewrite_cap", "pair_cap"):
+            for attr in ("capacity", "bind_cap", "delta_bind", "out_cap",
+                         "delta_out", "rewrite_cap", "delta_rewrite",
+                         "pair_cap"):
                 double(attr)
             if self.route_cap is not None:
                 double("route_cap")
@@ -907,6 +1260,10 @@ class JaxEngine:
         state.epoch = regrow(state.epoch, -1)
         state.marked = regrow(state.marked, False)
         state.tomb = regrow(state.tomb, -1)
+        # the sorted index keys survive the re-layout unchanged but the
+        # arrays are the wrong shape now; rebuild lazily (the one full
+        # argsort this mutation epoch) at the next operation's start
+        state.index_dirty = True
 
     @staticmethod
     def _snapshot(state: EngineState) -> dict:
@@ -914,6 +1271,7 @@ class JaxEngine:
 
         snap = {f: getattr(state, f) for f in (
             "spo", "epoch", "marked", "tomb", "n_used", "rep",
+            "sort_perm", "sorted_keys", "index_dirty",
             "program", "explicit", "r", "update_epoch",
         )}
         snap["stats"] = copy.copy(state.stats)
@@ -923,6 +1281,45 @@ class JaxEngine:
     def _restore(state: EngineState, snap: dict) -> None:
         for f, v in snap.items():
             setattr(state, f, v)
+
+    def _maybe_reset_fallback(self) -> None:
+        """Sticky wide-buffer fallback with a periodic narrow probe: every
+        4th operation under fallback tries the narrow delta buffers again
+        (one rollback if the workload is still store-scale, a return to
+        delta-scale costs if it is not)."""
+        if not self._delta_fallback:
+            return
+        self._fallback_ops += 1
+        if self._fallback_ops % 4 == 0:
+            self._delta_fallback = False
+
+    def _ensure_index(self, state: EngineState) -> None:
+        """(Re)build the persistent sorted index if it is stale.
+
+        The ONLY full argsort of the arena, paid at most once per mutation
+        epoch — after a capacity re-layout, or to adopt a hand-built state
+        — never inside the round loop (``stats.index_rebuilds`` counts the
+        sorts so tests can pin that budget).  Must run inside the engine's
+        x64 scope.
+        """
+        if not state.index_dirty:
+            return
+        key = ("rebuild_index",)
+        if key not in self._fns:
+            def fn(spo, epoch, marked):
+                live = (epoch >= 0) & ~marked
+                keys = jnp.where(live, _pack3(spo), KEY_MAX)
+                perm = jnp.argsort(keys)
+                return perm.astype(I32), keys[perm]
+
+            a = self.axis
+            d = P(a) if a else None
+            self._fns[key] = self._wrap(fn, in_specs=(d, d, d), out_specs=(d, d))
+        state.sort_perm, state.sorted_keys = self._fns[key](
+            state.spo, state.epoch, state.marked
+        )
+        state.index_dirty = False
+        state.stats.index_rebuilds += 1
 
     def _refresh_stats(self, state: EngineState) -> None:
         stats = state.stats
@@ -943,17 +1340,31 @@ class JaxEngine:
     def state_rep(self, state: EngineState) -> np.ndarray:
         return compress_np(np.asarray(state.rep))
 
-    @staticmethod
-    def snapshot_arrays(spo, epoch, marked, rep, at_epoch: int) -> StoreSnapshot:
+    def snapshot_arrays(
+        self, spo, epoch, marked, rep, at_epoch: int,
+        sort_perm=None, sorted_keys=None, index_dirty: bool = True,
+    ) -> StoreSnapshot:
         """Build a :class:`StoreSnapshot` from raw barrier-consistent arrays.
 
         The arrays must describe an epoch barrier (an operation fixpoint) —
         either a live :class:`EngineState` between updates, or the rollback
         snapshot captured before an in-flight update started (the serving
-        scheduler's lazy-publication path).
+        scheduler's lazy-publication path).  When the persistent sorted
+        index is supplied (and clean), the live rows are extracted through
+        it — one gather instead of a full-arena boolean scan, and the
+        published triples come out packed-key-sorted per shard block.
         """
-        live = (np.asarray(epoch) >= 0) & ~np.asarray(marked)
-        triples = np.asarray(spo)[live]
+        if sorted_keys is not None and not index_dirty:
+            keys = np.asarray(sorted_keys).reshape(self.n_shards, -1)
+            perm = np.asarray(sort_perm).reshape(self.n_shards, -1)
+            spo_h = np.asarray(spo).reshape(self.n_shards, keys.shape[1], 3)
+            triples = np.concatenate(
+                [spo_h[s][perm[s][keys[s] < KEY_MAX]] for s in range(self.n_shards)],
+                axis=0,
+            )
+        else:
+            live = (np.asarray(epoch) >= 0) & ~np.asarray(marked)
+            triples = np.asarray(spo)[live]
         triples.setflags(write=False)  # shared by every reader at this epoch
         return StoreSnapshot(
             epoch=at_epoch,
@@ -969,9 +1380,13 @@ class JaxEngine:
         that no reader may observe.  :meth:`add_facts`/:meth:`delete_facts`
         bump ``state.update_epoch`` exactly when the barrier is reached, so
         snapshots taken between public API calls are always consistent.
+        Serving epochs reuse the persistent index for free: live rows come
+        out through one ``sort_perm`` gather.
         """
         snap = self.snapshot_arrays(
-            state.spo, state.epoch, state.marked, state.rep, state.update_epoch
+            state.spo, state.epoch, state.marked, state.rep, state.update_epoch,
+            sort_perm=state.sort_perm, sorted_keys=state.sorted_keys,
+            index_dirty=state.index_dirty,
         )
         state.stats.triples_unmarked = int(snap.triples.shape[0])
         return snap
@@ -1029,16 +1444,20 @@ class JaxEngine:
             if rounds_here > max_rounds:
                 raise RuntimeError("did not converge")
             proc = self._get_process_fn(int(cands.shape[0]))
-            spo, epoch, marked, n_used, rep_new, flags = proc(
+            spo, epoch, marked, n_used, rep_new, sort_perm, sorted_keys, flags = proc(
                 state.spo, state.epoch, state.marked, state.n_used, state.rep,
+                state.sort_perm, state.sorted_keys,
                 cands, cand_valid, jnp.asarray(r, I32),
             )
             state.spo, state.epoch, state.marked, state.n_used = (
                 spo, epoch, marked, n_used,
             )
+            state.sort_perm, state.sorted_keys = sort_perm, sorted_keys
             for kind in ("store", "rewrite", "route", "pair"):
                 if bool(np.asarray(flags["ov_" + kind]).any()):
-                    raise CapacityError(kind)
+                    raise CapacityError(
+                        self._active_rewrite_kind if kind == "rewrite" else kind
+                    )
             if bool(np.asarray(flags["contradiction"]).reshape(-1)[0]):
                 from .materialise import Contradiction
 
@@ -1062,9 +1481,23 @@ class JaxEngine:
             # evaluate plans for the new delta, skipping plans whose delta
             # atom is incompatible with the fresh rows' resource masks
             bufs = []
+            had_full = False
             n_new = int(np.asarray(flags["n_new"]).sum())
             if n_new > 0:
-                delta_masks = np.asarray(flags["fresh_masks"])
+                # per-position resource masks of the fresh delta, derived on
+                # the host from the compacted delta rows (all shards' rows
+                # arrive concatenated, so this is the global delta).  The
+                # device truncates the window per shard; if the fresh rows
+                # did not all fit, fall back to all-True masks — a superset,
+                # so plan skipping stays sound
+                d_rows = np.asarray(flags["delta_rows"])
+                d_rows = d_rows[np.asarray(flags["delta_valid"])]
+                if d_rows.shape[0] < n_new:
+                    delta_masks = np.ones((3, state.n_res), dtype=bool)
+                else:
+                    delta_masks = np.zeros((3, state.n_res), dtype=bool)
+                    for pos in range(3):
+                        delta_masks[pos][d_rows[:, pos]] = True
                 for k, rule in enumerate(state.program.rules):
                     bufs += self._eval_rule(
                         state, r + 1, rule, k, "delta", stats,
@@ -1074,15 +1507,22 @@ class JaxEngine:
                 bufs += self._eval_rule(
                     state, r + 1, state.program.rules[k], k, "full", stats
                 )
+                had_full = True
             requeued = []
             if bufs:
                 cands, cand_valid = self._bucket_cands(bufs)
-                rows_global = self.out_cap * self.n_shards
+                # rounds that evaluated requeued FULL plans can emit
+                # store-sized candidate sets — squeeze those to the wide
+                # out_cap (whose process fn the base run compiled) instead
+                # of forcing the narrow delta width into a growth retry
+                target = self.out_cap if had_full else self._active_delta_out
+                kind = "out" if had_full else self._active_delta_kind
+                rows_global = target * self.n_shards
                 if int(cands.shape[0]) > rows_global:
-                    sq = self._get_squeeze_fn(int(cands.shape[0]))
+                    sq = self._get_squeeze_fn(int(cands.shape[0]), target)
                     cands, cand_valid, sq_ov = sq(cands, cand_valid)
                     if bool(np.asarray(sq_ov).any()):
-                        raise CapacityError("out")
+                        raise CapacityError(kind)
                 have_cands = bool(cand_valid.any())
             else:
                 have_cands = False
@@ -1119,7 +1559,12 @@ class JaxEngine:
         head_consts = np.asarray([0 if is_var(t) else t for t in rule.head], np.int32)
         head_slots = tuple(t if is_var(t) else None for t in rule.head)
         plans = build_plans(rule, full=(mode == "full"), tombstone=(mode == "tomb"))
-        out_cap = self.out_cap if mode == "full" else self._active_delta_out
+        # full-evaluation plans keep the wide buffers (their bindings can be
+        # store-sized); delta/tomb plans use whichever narrow buffers the
+        # running operation activated — joins then sort/pad with the delta
+        full_plan = mode == "full"
+        out_cap = self.out_cap if full_plan else self._active_delta_out
+        bind_cap = self.bind_cap if full_plan else self._active_bind
         out = []
         for i, plan in enumerate(plans):
             if (
@@ -1130,16 +1575,20 @@ class JaxEngine:
                 continue
             plan_t = tuple(plan)
             fn = self._get_plan_fn(
-                ("plan", k, i, mode, plan_t, head_slots, self.bind_cap, out_cap),
-                plan_t, head_slots, out_cap,
+                ("plan", k, i, mode, plan_t, head_slots,
+                 ("bind", bind_cap), ("out", out_cap)),
+                plan_t, head_slots, bind_cap, out_cap,
             )
             heads, valid, n_d, n_a, ov_bind, ov_out = fn(
                 state.spo, state.epoch, state.marked, state.tomb,
+                state.sorted_keys, state.sort_perm,
                 jnp.asarray(r, I32),
                 jnp.asarray(atom_consts), jnp.asarray(head_consts),
             )
             if bool(np.asarray(ov_bind).any()):
-                raise CapacityError("bind")
+                raise CapacityError(
+                    "bind" if full_plan else self._active_bind_kind
+                )
             if bool(np.asarray(ov_out).any()):
                 # full plans always emit into out_cap; delta/tomb plans into
                 # whichever buffer is active (the kind label, not a value
@@ -1200,6 +1649,7 @@ class JaxEngine:
         from .incremental_spmd import spmd_add_facts, spmd_delete_facts
 
         t0 = time.perf_counter()
+        self._maybe_reset_fallback()
         while True:
             snap = self._snapshot(state)
             try:

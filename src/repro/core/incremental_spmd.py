@@ -63,6 +63,7 @@ from .engine_jax import (
     CapacityError,
     EngineState,
     _compact as _engine_compact,
+    _index_remove,
     _pack3,
     _route_rows,
 )
@@ -82,20 +83,23 @@ __all__ = [
 # per-shard step functions (pure; run under shard_map via engine._wrap)
 # ---------------------------------------------------------------------------
 
-def _match_local(spo, select, queries, qvalid):
-    """Row index of each query triple among the locally ``select``-ed rows.
+def _probe_index(sorted_keys, sort_perm, select, queries, qvalid):
+    """Row index of each query triple among the locally ``select``-ed rows,
+    via the shard's persistent sorted index — no arena sort per probe.
 
     Returns ``(rows, hit)`` — rows are clamped-garbage where ``hit`` is
-    False.  Selected rows are unique by the arena's insert-time dedup, so at
-    most one row matches a query.
+    False.  Live keys are unique by the arena's insert-time dedup, so at
+    most one index entry matches a query; ``select`` prunes subsets of the
+    live rows (e.g. already-tombstoned ones).  Invalid query slots are
+    excluded by masking ``hit`` with ``qvalid`` explicitly — the former
+    ``KEY_MAX - 1`` sentinel aliased a legitimate packed key at the 21-bit
+    ID boundary.
     """
-    skeys = jnp.where(select, _pack3(spo), KEY_MAX)
-    order = jnp.argsort(skeys)
-    sk = skeys[order]
-    qk = jnp.where(qvalid, _pack3(queries), KEY_MAX - 1)
-    pos = jnp.clip(jnp.searchsorted(sk, qk), 0, sk.shape[0] - 1)
-    hit = sk[pos] == qk
-    return order[pos], hit
+    qk = _pack3(queries)
+    pos = jnp.clip(jnp.searchsorted(sorted_keys, qk), 0, sorted_keys.shape[0] - 1)
+    rows = sort_perm[pos]
+    hit = (sorted_keys[pos] == qk) & qvalid & select[rows]
+    return rows, hit
 
 
 def _psum_bool(x, axis):
@@ -104,10 +108,10 @@ def _psum_bool(x, axis):
     return jax.lax.psum(x.astype(I32), axis) > 0
 
 
-def _seed_tombs(spo, epoch, marked, tomb, q, qv, *, axis):
+def _seed_tombs(sorted_keys, sort_perm, epoch, marked, tomb, q, qv, *, axis):
     """Tag wave-0 tombstones: local rows matching the replicated queries."""
     untagged = (epoch >= 0) & ~marked & (tomb < 0)
-    rows, hit = _match_local(spo, untagged, q, qv)
+    rows, hit = _probe_index(sorted_keys, sort_perm, untagged, q, qv)
     tgt = jnp.where(hit, rows, tomb.shape[0])
     tomb = tomb.at[tgt].set(jnp.zeros(tgt.shape, I32), mode="drop")
     n = hit.sum().astype(I32)
@@ -117,7 +121,8 @@ def _seed_tombs(spo, epoch, marked, tomb, q, qv, *, axis):
 
 
 def _od_step(
-    spo, epoch, marked, tomb, rep, sizes, suspect, heads, hv, w,
+    spo, epoch, marked, tomb, sorted_keys, sort_perm, rep, sizes, suspect,
+    heads, hv, w,
     *, axis, n_shards, route_cap, refl_cap,
 ):
     """One overdelete wave: tag heads + reflexivity children, detect suspect
@@ -160,9 +165,11 @@ def _od_step(
         stream, None, sv, axis, n_shards, route_cap
     )
 
-    # tombstone the matching local rows that are not already tagged
+    # tombstone the matching local rows that are not already tagged —
+    # probed against the persistent index (tomb tagging does not change
+    # liveness, so the index stays exact across the whole backward pass)
     untagged = store & (tomb < 0)
-    rows, hit = _match_local(spo, untagged, stream, sv)
+    rows, hit = _probe_index(sorted_keys, sort_perm, untagged, stream, sv)
     tgt = jnp.where(hit, rows, C)
     tomb = tomb.at[tgt].set(jnp.where(hit, w, 0).astype(I32), mode="drop")
 
@@ -208,10 +215,12 @@ def _od_step(
     return tomb, suspect, n_new[None], overflow[None], f_ov[None], od_masks
 
 
-def _finalize_tombs(spo, epoch, marked, tomb, rep, *, axis):
+def _finalize_tombs(spo, epoch, marked, tomb, sorted_keys, sort_perm, rep, *, axis):
     """Flip tombstones into the paper's outdated bit and reduce the
     per-position masks of overdeleted normal forms (the host-side rederive
-    rule filter).  Restores the ``tomb == -1`` forward invariant."""
+    rule filter).  Restores the ``tomb == -1`` forward invariant; the
+    finalised rows leave the persistent index by a stable partition (no
+    sort), keeping it exact for the rederive phase's membership probes."""
     tombed = tomb >= 0
     masks = []
     for pos in range(3):
@@ -226,13 +235,23 @@ def _finalize_tombs(spo, epoch, marked, tomb, rep, *, axis):
         n_od = jax.lax.psum(n_od, axis)
     marked = marked | tombed
     tomb = jnp.full_like(tomb, -1)
-    return marked, tomb, od_mask, n_od[None]
+    sort_perm, sorted_keys = _index_remove(
+        sort_perm, sorted_keys, tombed, spo.shape[0] - 1
+    )
+    return marked, tomb, sorted_keys, sort_perm, od_mask, n_od[None]
 
 
-def _member(spo, epoch, marked, q, qv, *, axis):
-    """Replicated membership of query triples among live store rows."""
-    live = (epoch >= 0) & ~marked
-    _rows, hit = _match_local(spo, live, q, qv)
+def _member(sorted_keys, q, qv, *, axis):
+    """Replicated membership of query triples among live store rows.
+
+    The index contains exactly the live rows, so a key hit IS liveness —
+    no row lookup or epoch/marked recheck needed.  The all-max-ID triple
+    packs to KEY_MAX itself (the padding sentinel, reserved — see
+    ``terms.MAX_ID``) and must not match the padding.
+    """
+    qk = _pack3(q)
+    pos = jnp.clip(jnp.searchsorted(sorted_keys, qk), 0, sorted_keys.shape[0] - 1)
+    hit = (sorted_keys[pos] == qk) & qv & (qk < KEY_MAX)
     return _psum_bool(hit, axis)
 
 
@@ -249,8 +268,15 @@ def _occupancy(spo, epoch, marked, rep, *, axis):
 # wrapped-fn getters (cached on the engine like its plan/process fns)
 # ---------------------------------------------------------------------------
 
+_KEY_FAMILY = {"refl_cap": "out", "route_cap": "route"}
+
+
 def _get_step_fn(engine, name, fn, in_specs, out_specs, **static):
-    key = (name,) + tuple(sorted(static.items()))
+    # cap-valued statics are tagged with their buffer family so the
+    # engine's precise post-growth eviction finds them
+    key = (name,) + tuple(
+        sorted((_KEY_FAMILY.get(k, k), v) for k, v in static.items())
+    )
     if key not in engine._fns:
         a = engine.axis
         engine._fns[key] = engine._wrap(
@@ -270,7 +296,7 @@ def _seed_fn(engine):
     d, rpl = _specs(engine)
     return _get_step_fn(
         engine, "seed_tombs", _seed_tombs,
-        in_specs=(d, d, d, d, rpl, rpl), out_specs=(d, rpl),
+        in_specs=(d, d, d, d, d, rpl, rpl), out_specs=(d, rpl),
     )
 
 
@@ -279,7 +305,7 @@ def _od_fn(engine, n_heads: int):
     route_cap = engine.route_cap if engine.axis is not None else None
     return _get_step_fn(
         engine, ("od", n_heads), _od_step,
-        in_specs=(d, d, d, d, rpl, rpl, rpl, d, d, rpl),
+        in_specs=(d, d, d, d, d, d, rpl, rpl, rpl, d, d, rpl),
         out_specs=(d, rpl, rpl, d, d, rpl),
         n_shards=engine.n_shards, route_cap=route_cap,
         refl_cap=engine._active_delta_out,
@@ -290,7 +316,7 @@ def _finalize_fn(engine):
     d, rpl = _specs(engine)
     return _get_step_fn(
         engine, "finalize_tombs", _finalize_tombs,
-        in_specs=(d, d, d, d, rpl), out_specs=(d, d, rpl, rpl),
+        in_specs=(d, d, d, d, d, d, rpl), out_specs=(d, d, d, d, rpl, rpl),
     )
 
 
@@ -298,7 +324,7 @@ def _member_fn(engine):
     d, rpl = _specs(engine)
     return _get_step_fn(
         engine, "member", _member,
-        in_specs=(d, d, d, rpl, rpl), out_specs=rpl,
+        in_specs=(d, rpl, rpl), out_specs=rpl,
     )
 
 
@@ -328,7 +354,10 @@ def _seed_query(engine, state: EngineState, rows: np.ndarray) -> int:
     total = 0
     fn = _seed_fn(engine)
     for _n, q, qv in _chunks(rows, engine.seed_chunk):
-        state.tomb, n = fn(state.spo, state.epoch, state.marked, state.tomb, q, qv)
+        state.tomb, n = fn(
+            state.sorted_keys, state.sort_perm, state.epoch, state.marked,
+            state.tomb, q, qv,
+        )
         total += int(np.asarray(n).reshape(-1)[0])
     return total
 
@@ -340,7 +369,7 @@ def _member_query(engine, state: EngineState, rows: np.ndarray) -> np.ndarray:
     fn = _member_fn(engine)
     out = []
     for n, q, qv in _chunks(rows, engine.seed_chunk):
-        hit = np.asarray(fn(state.spo, state.epoch, state.marked, q, qv))
+        hit = np.asarray(fn(state.sorted_keys, q, qv))
         out.append(hit[:n])
     return np.concatenate(out)
 
@@ -348,13 +377,22 @@ def _member_query(engine, state: EngineState, rows: np.ndarray) -> np.ndarray:
 def _tomb_heads(engine, state: EngineState, w: int, masks: np.ndarray):
     """Evaluate the tombstone delta plans for wave ``w``, skipping plans
     whose delta atom cannot match the frontier (``masks`` = the previous
-    wave's per-position resource masks)."""
+    wave's per-position resource masks).  Wide bucketed head streams are
+    squeezed to the active delta width so the wave step's dedup/probe work
+    scales with the wave, not with the number of rules that fired."""
     bufs = []
     for k, rule in enumerate(state.program.rules):
         bufs += engine._eval_rule(state, w, rule, k, "tomb", None, delta_masks=masks)
     if not bufs:
         return jnp.zeros((0, 3), I32), jnp.zeros((0,), bool)
-    return engine._bucket_cands(bufs)
+    heads, hv = engine._bucket_cands(bufs)
+    rows_global = engine._active_delta_out * engine.n_shards
+    if int(heads.shape[0]) > rows_global:
+        sq = engine._get_squeeze_fn(int(heads.shape[0]), engine._active_delta_out)
+        heads, hv, sq_ov = sq(heads, hv)
+        if bool(np.asarray(sq_ov).any()):
+            raise CapacityError(engine._active_delta_kind)
+    return heads, hv
 
 
 def _head_may_rederive(rule, od_mask: np.ndarray, rep_old: np.ndarray) -> bool:
@@ -387,6 +425,7 @@ def spmd_add_phases(engine, state: EngineState, delta, max_rounds: int):
     retry restarts the phases from scratch against the restored state.
     A no-effect delta yields nothing.
     """
+    engine._ensure_index(state)  # rebuild only after a capacity re-layout
     delta = dedup_rows(delta)
     delta = setdiff_rows(delta, state.explicit)
     if delta.shape[0] == 0:
@@ -427,6 +466,7 @@ def spmd_delete_phases(engine, state: EngineState, delta, max_rounds: int):
     Same contract as :func:`spmd_add_phases`: exhaust or roll back; a
     no-effect delta yields nothing.
     """
+    engine._ensure_index(state)  # rebuild only after a capacity re-layout
     delta = dedup_rows(delta)
     if delta.shape[0] and state.explicit.shape[0]:
         delta = delta[np.isin(pack(delta), pack(state.explicit))]
@@ -472,19 +512,28 @@ def spmd_delete_phases(engine, state: EngineState, delta, max_rounds: int):
         fn = _od_fn(engine, int(heads.shape[0]))
         state.tomb, suspect, n_new, ov_route, ov_refl, od_masks = fn(
             state.spo, state.epoch, state.marked, state.tomb,
+            state.sorted_keys, state.sort_perm,
             state.rep, sizes_j, suspect, heads, hv, jnp.asarray(w, I32),
         )
         if bool(np.asarray(ov_route).any()):
             raise CapacityError("route")
         if bool(np.asarray(ov_refl).any()):
-            raise CapacityError("delta_out")
+            # the reflexivity buffer is sized by the ACTIVE delta width —
+            # under the wide-buffer fallback that is out_cap, whose growth
+            # kind must be named or the (clamped) delta cap would stop
+            # growing and the retry loop would spin on the same overflow
+            raise CapacityError(engine._active_delta_kind)
         if int(np.asarray(n_new).reshape(-1)[0]) == 0:
             break
         masks = np.asarray(od_masks)
         yield "wave"
 
-    state.marked, state.tomb, od_mask, n_od = _finalize_fn(engine)(
-        state.spo, state.epoch, state.marked, state.tomb, state.rep
+    (
+        state.marked, state.tomb, state.sorted_keys, state.sort_perm,
+        od_mask, n_od,
+    ) = _finalize_fn(engine)(
+        state.spo, state.epoch, state.marked, state.tomb,
+        state.sorted_keys, state.sort_perm, state.rep,
     )
     n_od = int(np.asarray(n_od).reshape(-1)[0])
     state.stats.overdeleted += n_od

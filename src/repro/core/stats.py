@@ -26,6 +26,7 @@ class MatStats:
     rule_rewrites: int = 0          # how many times P' := rho(P) changed P'
     rules_requeued: int = 0         # rules placed on the R queue analogue
     od_waves: int = 0               # overdelete waves (incremental deletes)
+    index_rebuilds: int = 0         # full argsorts of the arena index (<=1/epoch)
     overdeleted: int = 0            # rows tombstoned across deletes
     suspects_split: int = 0         # sameAs cliques split + re-merged
     triples_total: int = 0          # arena rows used (marked + unmarked)

@@ -19,8 +19,13 @@ SAME_AS = 1          # owl:sameAs
 DIFFERENT_FROM = 2   # owl:differentFrom
 N_RESERVED = 3
 
-# packing limit for int64 triple keys; the top two IDs are reserved so the
-# engine's KEY_MAX / KEY_MAX-1 sentinels can never collide with a real key
+# packing limit for int64 triple keys; the top IDs are reserved so the
+# engine's KEY_MAX padding sentinel can never collide with a dictionary key.
+# (Raw engine inputs may exceed MAX_ID up to 2^21-1: probes mask validity
+# explicitly rather than leaning on a KEY_MAX-1 sentinel, which aliases the
+# packed key of <2^21-1, 2^21-1, 2^21-2>.  The single triple whose IDs are
+# ALL 2^21-1 packs to KEY_MAX itself and stays reserved — the engine never
+# stores it.)
 MAX_ID = (1 << 21) - 3
 
 RESERVED_NAMES = {

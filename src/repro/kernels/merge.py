@@ -1,0 +1,82 @@
+"""Rank-merge of two sorted key/value columns — the index-maintenance op.
+
+The engine's persistent sorted arena index
+(:class:`repro.core.engine_jax.EngineState` ``sorted_keys``/``sort_perm``)
+is updated on insertion by merging a small, already-sorted fresh delta into
+the big sorted index.  A serial two-pointer merge is O(A+B) but sequential —
+hostile to the VPU; the data-parallel formulation computes each element's
+final position directly as *its own index plus its rank in the other
+column*:
+
+    pos_a[i] = i + #{j : b[j] <  a[i]}      (ties: a-side first)
+    pos_b[j] = j + #{i : a[i] <= b[j]}
+
+which is two ``searchsorted`` calls and one scatter — O((A+B) log) compares,
+no sort.  The left/right tie-break makes the positions exactly the (stable)
+merge permutation: collision-free even with duplicate keys.
+
+Padding uses KEY_MAX sentinels, which sort above every real key, so
+truncating the merged result back to the index capacity only ever drops
+padding (the engine guarantees live rows <= capacity; overflow is detected
+upstream and raises the capacity retry).
+
+The counting formulation of the companion Pallas kernel
+(:mod:`repro.kernels.bsearch`, ``search_bounds``) computes the same ranks as
+tiled compare-and-reduce on TPU; this module stays pure jnp so it can run
+inside ``shard_map`` on any backend and under the engine's x64 scope.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def merge_ranks(a_keys: jnp.ndarray, b_keys: jnp.ndarray):
+    """Positions of each element of two sorted columns in their merge.
+
+    Ties place all ``a`` elements before the equal ``b`` elements (the
+    stable order for merging a fresh delta *behind* the existing index is
+    irrelevant here because the engine never merges duplicate live keys;
+    the convention just guarantees distinct positions).
+    """
+    pos_a = jnp.arange(a_keys.shape[0]) + jnp.searchsorted(
+        b_keys, a_keys, side="left"
+    )
+    pos_b = jnp.arange(b_keys.shape[0]) + jnp.searchsorted(
+        a_keys, b_keys, side="right"
+    )
+    return pos_a, pos_b
+
+
+def merge_sorted(
+    a_keys: jnp.ndarray,
+    a_vals: jnp.ndarray,
+    b_keys: jnp.ndarray,
+    b_vals: jnp.ndarray,
+    out_len: int | None = None,
+):
+    """Merge sorted ``(keys, vals)`` columns, truncated to ``out_len`` rows.
+
+    Both inputs must be individually sorted ascending.  Returns the first
+    ``out_len`` (default: ``len(a)``) rows of the merged order — safe when
+    everything past ``out_len`` is known to be sentinel padding.
+
+    Gather formulation (cheaper than scattering on CPU backends when ``b``
+    is the small side): output position ``p`` holds the ``b`` element whose
+    merge position ``pos_b`` equals ``p``, else the ``a`` element at index
+    ``p - #{b placed before p}`` — both found by binary search over the
+    monotone ``pos_b``.
+    """
+    A, B = a_keys.shape[0], b_keys.shape[0]
+    out_len = A if out_len is None else out_len
+    if B == 0:
+        return a_keys[:out_len], a_vals[:out_len]
+    pos_b = jnp.arange(B) + jnp.searchsorted(a_keys, b_keys, side="right")
+    p = jnp.arange(out_len)
+    ib = jnp.searchsorted(pos_b, p, side="left")
+    from_b = pos_b[jnp.clip(ib, 0, B - 1)] == p
+    ja = jnp.clip(p - ib, 0, A - 1)
+    jb = jnp.clip(ib, 0, B - 1)
+    keys = jnp.where(from_b, b_keys[jb], a_keys[ja])
+    vals = jnp.where(from_b, b_vals[jb], a_vals[ja])
+    return keys, vals

@@ -359,14 +359,17 @@ def build_engine_cell(spec: ArchSpec, shape: ShapeSpec, mesh) -> Workload:
     plan = tuple(build_plans(rule, full=False)[0])
     head_slots = tuple(t if t < 0 else None for t in rule.head)
 
-    def step(spo, epoch, marked, tomb, n_used, rep, atom_consts, head_consts, r):
+    def step(spo, epoch, marked, tomb, n_used, rep, sort_perm, sorted_keys,
+             atom_consts, head_consts, r):
         heads, valid, n_d, n_a, ov_b, ov_o = eval_plan(
-            spo, epoch, marked, tomb, r, atom_consts, head_consts,
+            spo, epoch, marked, tomb, sorted_keys, sort_perm, r,
+            atom_consts, head_consts,
             plan=plan, head_var_slots=head_slots,
             bind_cap=bind_cap, out_cap=out_cap, axis=axes,
         )
         return process_candidates(
-            spo, epoch, marked, n_used, rep, heads, valid, r,
+            spo, epoch, marked, n_used, rep, sort_perm, sorted_keys,
+            heads, valid, r,
             rewrite_cap=rw_cap, axis=axes, n_shards=n_dev,
             route_cap=cfg.route_cap,
         )
@@ -374,15 +377,17 @@ def build_engine_cell(spec: ArchSpec, shape: ShapeSpec, mesh) -> Workload:
     smap = compat_shard_map(
         step,
         mesh=mesh,
-        in_specs=(P(axes), P(axes), P(axes), P(axes), P(axes), P(), P(), P(), P()),
+        in_specs=(P(axes), P(axes), P(axes), P(axes), P(axes), P(),
+                  P(axes), P(axes), P(), P(), P()),
         out_specs=(
-            P(axes), P(axes), P(axes), P(axes), P(),
+            P(axes), P(axes), P(axes), P(axes), P(), P(axes), P(axes),
             {
                 "rep_changed": P(), "contradiction": P(),
                 "ov_rewrite": P(axes), "ov_store": P(axes), "ov_route": P(axes),
                 "ov_pair": P(axes),
                 "n_new": P(axes), "n_pairs": P(), "n_marked": P(axes),
-                "n_reflexive": P(axes), "fresh_masks": P(),
+                "n_reflexive": P(axes), "delta_rows": P(axes),
+                "delta_valid": P(axes),
             },
         ),
     )
@@ -392,11 +397,13 @@ def build_engine_cell(spec: ArchSpec, shape: ShapeSpec, mesh) -> Workload:
         _sds((rows, 3), I32), _sds((rows,), I32), _sds((rows,), jnp.bool_),
         _sds((rows,), I32),
         _sds((n_dev,), I32), _sds((n_res,), I32),
+        _sds((rows,), I32), _sds((rows,), jnp.int64),
         _sds((2, 3), I32), _sds((3,), I32), _sds((), I32),
     )
     in_sh = tuple(
         [_ns(mesh, axes, None), _ns(mesh, axes), _ns(mesh, axes), _ns(mesh, axes),
-         _ns(mesh, axes), _ns(mesh), _ns(mesh), _ns(mesh), _ns(mesh)]
+         _ns(mesh, axes), _ns(mesh), _ns(mesh, axes), _ns(mesh, axes),
+         _ns(mesh), _ns(mesh), _ns(mesh)]
     )
     out_sh = None  # let SPMD infer from shard_map out_specs
     # one round over a full arena: joins ~ sort+search over cap rows/device

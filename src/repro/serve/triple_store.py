@@ -176,6 +176,8 @@ class TripleStore:
                 self._published = self.engine.snapshot_arrays(
                     s["spo"], s["epoch"], s["marked"], s["rep"],
                     s["update_epoch"],
+                    sort_perm=s["sort_perm"], sorted_keys=s["sorted_keys"],
+                    index_dirty=s["index_dirty"],
                 )
         return self._published
 
@@ -260,6 +262,7 @@ class TripleStore:
         self._inflight = t
         t.status = "running"
         self._t_start = time.perf_counter()
+        self.engine._maybe_reset_fallback()
         self._snap = self.engine._snapshot(self.state)
         self._gen = self._make_gen(t)
         self.inflight_phase = "admitted"

@@ -1,0 +1,75 @@
+"""Deterministic bench smoke + the --check regression gate's semantics.
+
+The heavy profiles stay in ``benchmarks/run.py``; tier-1 gets (a) a tiny
+deterministic ``run_one`` pass that exercises the full host/engine/scratch
+comparison (oracle asserts included) and pins the JSON row schema —
+``n_warmup`` and the consistent warm-up exclusion of ISSUE 4's bench
+satellite — and (b) pure-function tests of ``compare_incremental``, the
+gate ``benchmarks/run.py --check`` fails builds with.
+"""
+
+import numpy as np
+
+from benchmarks.bench_incremental import _steady_mask, run_one
+from benchmarks.run import compare_incremental
+
+
+def test_bench_smoke_row_schema():
+    kw = dict(
+        n_groups=1, group_size=3, n_spokes_per=1, n_plain=12,
+        hierarchy_depth=1,
+    )
+    row = run_one("micro", kw, n_events=3, batch=4, seed=0)
+    assert row["dataset"] == "micro"
+    assert row["events"] == 3
+    # warm-up = each op kind's first occurrence, recorded in the row
+    ops = row["per_event"]["ops"]
+    assert row["n_warmup"] == len({*ops})
+    assert len(row["per_event"]["engine_s"]) == 3
+    # steady means exist iff a non-warm-up event exists, and then exclude
+    # the warm-up events consistently
+    steady_events = [
+        t for i, (op, t) in enumerate(zip(ops, row["per_event"]["engine_s"]))
+        if op in ops[:i]
+    ]
+    if steady_events:
+        assert row["steady_engine_s_per_event"] is not None
+        assert row["steady_engine_s_per_event"] <= max(
+            row["per_event"]["engine_s"]
+        )
+        assert row["speedup_engine_vs_scratch"] is not None
+    else:
+        assert row["steady_engine_s_per_event"] is None
+        assert row["speedup_engine_vs_scratch"] is None
+
+
+def test_steady_mask_excludes_first_occurrences():
+    events = [("add", None), ("delete", None), ("add", None), ("delete", None)]
+    assert _steady_mask(events).tolist() == [False, False, True, True]
+    # a stream of nothing but first occurrences has NO steady events — the
+    # old fallback averaged the compile-laden events back in
+    assert _steady_mask(events[:2]).tolist() == [False, False]
+
+
+def test_compare_incremental_gate():
+    baseline = {"rows": [
+        {"dataset": "a", "speedup_engine_vs_scratch": 1.0},
+        {"dataset": "b", "speedup_engine_vs_scratch": 2.0},
+        {"dataset": "null", "speedup_engine_vs_scratch": None},
+    ]}
+    fresh = [
+        {"dataset": "a", "speedup_engine_vs_scratch": 0.85},   # -15%: ok
+        {"dataset": "b", "speedup_engine_vs_scratch": 1.55},   # -22.5%: fail
+        {"dataset": "null", "speedup_engine_vs_scratch": 3.0}, # no baseline
+        {"dataset": "new", "speedup_engine_vs_scratch": 0.1},  # not in base
+    ]
+    problems = compare_incremental(fresh, baseline, tolerance=0.2)
+    assert len(problems) == 1 and problems[0].startswith("b:")
+    # improvement and exact-threshold values pass
+    assert compare_incremental(
+        [{"dataset": "a", "speedup_engine_vs_scratch": 0.8}], baseline
+    ) == []
+    # a fresh null speedup against a real baseline is a regression
+    assert compare_incremental(
+        [{"dataset": "a", "speedup_engine_vs_scratch": None}], baseline
+    ) != []

@@ -202,3 +202,150 @@ def test_rule_parse_and_rewrite():
 def test_unsafe_rule_rejected():
     with pytest.raises(ValueError):
         Rule((var(1), SAME_AS, var(2)), ((var(1), 5, 6),))
+
+
+def test_probe_boundary_key_no_sentinel_alias():
+    """Satellite bugfix pin: an INVALID probe slot must never hit a store
+    row, even when the garbage in the slot packs to KEY_MAX - 1 — the key
+    of <2^21-1, 2^21-1, 2^21-2>, which raw (non-dictionary) engine inputs
+    can legitimately contain.  The old code parked invalid probes at the
+    KEY_MAX - 1 sentinel, so such a row was spuriously matched (and e.g.
+    tombstoned by _seed_tombs)."""
+    import jax.numpy as jnp
+
+    from repro.core.engine_jax import I32, KEY_MAX, enable_x64
+    from repro.core.incremental_spmd import _probe_index
+
+    m = (1 << 21) - 1
+    boundary = np.asarray([m, m, m - 1], np.int32)  # packs to KEY_MAX - 1
+    with enable_x64():
+        spo = jnp.asarray(np.stack([[1, 2, 3], boundary]), I32)
+        keys = np.array([pack(np.asarray([[1, 2, 3]], np.int64))[0],
+                         np.int64((1 << 63) - 2)])
+        order = np.argsort(keys)
+        sorted_keys = jnp.asarray(keys[order])
+        sort_perm = jnp.asarray(order.astype(np.int32))
+        select = jnp.asarray([True, True])
+        # one valid query for the boundary row, one INVALID slot holding the
+        # exact same garbage triple
+        queries = jnp.asarray(np.stack([boundary, boundary]), I32)
+        qvalid = jnp.asarray([True, False])
+        rows, hit = _probe_index(sorted_keys, sort_perm, select, queries, qvalid)
+        assert np.asarray(hit).tolist() == [True, False]
+        assert int(np.asarray(rows)[0]) == 1
+        assert int(np.asarray(sorted_keys)[1]) == (1 << 63) - 2  # KEY_MAX - 1 real
+
+
+def test_probe_respects_select_mask():
+    """A probe hit on a live row excluded by ``select`` (e.g. already
+    tombstoned) reports no hit."""
+    import jax.numpy as jnp
+
+    from repro.core.engine_jax import I32, KEY_MAX, enable_x64
+    from repro.core.incremental_spmd import _probe_index
+
+    with enable_x64():
+        rows_np = np.asarray([[1, 2, 3], [4, 5, 6]], np.int32)
+        keys = np.sort(pack(rows_np.astype(np.int64)))
+        sorted_keys = jnp.asarray(keys)
+        sort_perm = jnp.asarray(np.argsort(pack(rows_np.astype(np.int64))).astype(np.int32))
+        queries = jnp.asarray(rows_np, I32)
+        qvalid = jnp.asarray([True, True])
+        rows, hit = _probe_index(
+            sorted_keys, sort_perm, jnp.asarray([False, True]), queries, qvalid
+        )
+        assert np.asarray(hit).tolist() == [False, True]
+
+
+def test_compact_is_stable_partition():
+    """_compact packs valid rows front, stably, without sorting; overflow
+    flags valid rows beyond cap; tail rows stay masked."""
+    import jax.numpy as jnp
+
+    from repro.core.engine_jax import _compact, enable_x64
+
+    with enable_x64():
+        col = jnp.asarray(np.arange(10, dtype=np.int32))
+        valid = jnp.asarray([False, True, True, False, True, False, True, True, False, True])
+        out, ov_valid, overflow = _compact({"c": col}, valid, 8)
+        assert np.asarray(out["c"])[np.asarray(ov_valid)].tolist() == [1, 2, 4, 6, 7, 9]
+        assert not bool(overflow)
+        out, ov_valid, overflow = _compact({"c": col}, valid, 4)
+        assert np.asarray(out["c"])[np.asarray(ov_valid)].tolist() == [1, 2, 4, 6]
+        assert bool(overflow)
+
+
+def test_index_invariant_report_catches_corruption():
+    """The invariant checker itself must flag a broken index."""
+    from repro.core.engine_jax import JaxEngine, index_invariant_report
+    from repro.data.datasets import pex
+
+    facts, prog, dic = pex()
+    eng = JaxEngine(dic.n_resources, capacity=64, bind_cap=64, out_cap=64,
+                    rewrite_cap=64)
+    state = eng.materialise_state(facts, prog)
+    assert index_invariant_report(state) == []
+    import jax.numpy as jnp
+
+    from repro.core.engine_jax import enable_x64
+
+    with enable_x64():
+        state.sorted_keys = state.sorted_keys.at[0].set(jnp.int64(12345))
+    assert index_invariant_report(state) != []
+
+
+def test_delta_growth_clamped_and_eviction_scoped():
+    """Review pins: (1) delta caps never double past their wide caps (the
+    periodic narrow probe must not re-grow + recompile forever on
+    store-scale workloads); (2) eviction after growth is family-precise
+    for tagged keys but still value-matches derived-width keys (padbuf /
+    process / squeeze), which would otherwise leak executables."""
+    from repro.core.engine_jax import JaxEngine
+
+    eng = JaxEngine(10, capacity=64, bind_cap=1 << 13, out_cap=1 << 13,
+                    rewrite_cap=1 << 13)
+    assert eng.delta_bind == 1 << 13  # floor == wide here
+    eng._grow_for("delta_bind")
+    assert eng.delta_bind == 1 << 13  # clamped at bind_cap
+    assert eng._delta_fallback
+    eng._grow_for("bind")  # wide grows (fallback active -> x4)
+    assert eng.bind_cap == 1 << 15
+    eng._grow_for("delta_bind")  # now below wide again: doubles
+    assert eng.delta_bind == 1 << 14
+
+    # eviction scoping
+    eng._fns = {
+        ("plan", 0, 0, "delta", (), (), ("bind", 1 << 14), ("out", 1 << 13)): 1,
+        ("plan", 0, 0, "full", (), (), ("bind", 1 << 15), ("out", 1 << 13)): 2,
+        ("padbuf", 1 << 14): 3,
+        ("process", 1 << 14, ("rewrite", 4096), ("route", None),
+         ("out", 1 << 13), ("pair", 4096)): 4,
+        ("squeeze", 123, ("out", 1 << 13)): 5,
+    }
+    eng._grow_for("delta_bind")  # 1<<14 -> 1<<15, records ("bind", 1<<14)
+    assert eng.delta_bind == 1 << 15
+    keys = set(eng._fns.values())
+    # the delta-bind plan fn and the derived-width padbuf/process entries
+    # at the outgrown value are gone; the wide plan fn and unrelated
+    # squeeze survive (no ("out", ...) growth happened)
+    assert keys == {2, 5}
+
+
+def test_member_rejects_key_max_padding_match():
+    """The all-max-ID triple packs to KEY_MAX (the padding sentinel, reserved);
+    _member must not report it present by matching index padding."""
+    import jax.numpy as jnp
+
+    from repro.core.engine_jax import I32, enable_x64
+    from repro.core.incremental_spmd import _member
+
+    m = (1 << 21) - 1
+    with enable_x64():
+        sorted_keys = jnp.asarray(
+            np.array([pack(np.asarray([[1, 2, 3]], np.int64))[0],
+                      np.int64((1 << 63) - 1)])  # one live key + padding
+        )
+        q = jnp.asarray(np.stack([[1, 2, 3], [m, m, m]]), I32)
+        qv = jnp.asarray([True, True])
+        hit = _member(sorted_keys, q, qv, axis=None)
+        assert np.asarray(hit).tolist() == [True, False]

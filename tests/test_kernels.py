@@ -167,3 +167,43 @@ def test_flash_matches_chunked_xla_path():
     a = gqa_attention(q, k, v, causal=True, chunk=16)
     b = ops.flash_attention(q, k, v, causal=True, block_q=16, block_k=16)
     np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=2e-5)
+
+
+@pytest.mark.parametrize("na,nb", [(16, 4), (100, 100), (1000, 37), (257, 0)])
+@pytest.mark.parametrize("dup", [False, True])
+def test_merge_sorted_sweep(na, nb, dup):
+    """Rank-merge of two sorted key/value columns == numpy mergesort, with
+    sentinel padding and (cross-column) duplicate keys."""
+    from jax.experimental import enable_x64
+
+    from repro.kernels.merge import merge_ranks, merge_sorted
+
+    KEY_MAX = np.int64((1 << 63) - 1)
+    hi = 1 << 10 if dup else 1 << 60  # force duplicates in the small space
+    with enable_x64():
+        a = np.sort(RNG.integers(0, hi, na).astype(np.int64))
+        b = np.sort(RNG.integers(0, hi, nb).astype(np.int64))
+        a[na // 2 :] = KEY_MAX  # sentinel-padded tails, like the arena index
+        av = np.arange(na, dtype=np.int32)
+        bv = np.arange(nb, dtype=np.int32) + 10_000
+        mk, mv = merge_sorted(
+            jnp.asarray(a), jnp.asarray(av), jnp.asarray(b), jnp.asarray(bv),
+            out_len=na + nb,
+        )
+        mk, mv = np.asarray(mk), np.asarray(mv)
+        assert (np.diff(mk) >= 0).all()
+        np.testing.assert_array_equal(np.sort(np.concatenate([a, b])), mk)
+        # every (key, val) pair survives the merge exactly once
+        want = sorted(zip(a.tolist() + b.tolist(), av.tolist() + bv.tolist()))
+        got = sorted(zip(mk.tolist(), mv.tolist()))
+        assert want == got
+        # truncation keeps a prefix of the merged order
+        tk, _ = merge_sorted(
+            jnp.asarray(a), jnp.asarray(av), jnp.asarray(b), jnp.asarray(bv),
+            out_len=na,
+        )
+        np.testing.assert_array_equal(np.asarray(tk), mk[:na])
+        # merge_ranks positions are a collision-free permutation
+        pa, pb = merge_ranks(jnp.asarray(a), jnp.asarray(b))
+        pos = np.concatenate([np.asarray(pa), np.asarray(pb)])
+        assert np.array_equal(np.sort(pos), np.arange(na + nb))
