@@ -13,9 +13,12 @@
 
 ``python -m benchmarks.run --check [tolerance]`` — regression gate: rerun
 the incremental section (without overwriting the JSON) and exit non-zero if
-any dataset's ``speedup_engine_vs_scratch`` regressed more than
-``tolerance`` (default 0.2 = 20%) below the committed
-BENCH_incremental.json baseline.
+any dataset regressed against the committed BENCH_incremental.json
+baseline — ``speedup_engine_vs_scratch`` (machine-normalised) by more than
+``tolerance`` (default 0.2 = 20%), or ``steady_engine_s_per_event``
+(absolute wall-clock backstop, so a profile with a tiny committed speedup
+is still gated against per-event blow-ups) by more than the wider
+``max(3 * tolerance, 0.6)``.
 """
 
 from __future__ import annotations
@@ -32,30 +35,54 @@ BASELINE = os.path.join(
 
 
 def compare_incremental(
-    rows: list[dict], baseline_doc: dict, tolerance: float = 0.2
+    rows: list[dict],
+    baseline_doc: dict,
+    tolerance: float = 0.2,
+    time_tolerance: float | None = None,
 ) -> list[str]:
-    """Regressions of ``speedup_engine_vs_scratch`` vs a baseline doc.
+    """Regressions vs a committed baseline doc, on two axes per dataset:
 
-    Returns one message per dataset whose fresh speedup fell more than
-    ``tolerance`` (fractional) below the committed value; datasets missing
-    from either side, or with null speedups on the baseline side, are
-    skipped.  Pure so the tier-1 bench smoke can pin the gate's semantics
-    without timing anything.
+      * ``speedup_engine_vs_scratch`` falling more than ``tolerance``
+        (fractional, default 20%) below the committed value — the
+        machine-normalised gate (scratch time divides out host speed);
+      * ``steady_engine_s_per_event`` rising more than ``time_tolerance``
+        (default ``max(3 * tolerance, 0.6)`` = 60%) above the committed
+        value — an absolute wall-clock backstop.  It catches a profile
+        whose committed speedup is so small that speedup noise swamps a
+        many-x per-event blow-up (the uobm_like failure mode of PR 4:
+        steady 7.30 -> 11.93 s/event, +63%).  Its tolerance is wider than
+        the speedup axis because raw engine wall-clock varies ~30-50%
+        run-to-run at CPU bench scale (XLA compile/dispatch jitter), and
+        it IS machine-dependent — regenerate the baseline on the CI
+        machine before trusting a bare time gate.
+
+    Datasets missing from either side, or null on the baseline side, are
+    skipped per-metric.  Pure so the tier-1 bench smoke can pin the gate's
+    semantics without timing anything.
     """
-    base = {
-        r["dataset"]: r.get("speedup_engine_vs_scratch")
-        for r in baseline_doc.get("rows", [])
-    }
+    if time_tolerance is None:
+        time_tolerance = max(3 * tolerance, 0.6)
+    base = {r["dataset"]: r for r in baseline_doc.get("rows", [])}
     problems = []
     for r in rows:
-        want = base.get(r["dataset"])
-        got = r.get("speedup_engine_vs_scratch")
-        if want is None:
+        b = base.get(r["dataset"])
+        if b is None:
             continue
-        if got is None or got < want * (1.0 - tolerance):
+        want = b.get("speedup_engine_vs_scratch")
+        got = r.get("speedup_engine_vs_scratch")
+        if want is not None and (got is None or got < want * (1.0 - tolerance)):
             problems.append(
                 f"{r['dataset']}: speedup_engine_vs_scratch {got} < "
                 f"baseline {want} - {int(tolerance * 100)}%"
+            )
+        want_t = b.get("steady_engine_s_per_event")
+        got_t = r.get("steady_engine_s_per_event")
+        if want_t is not None and got_t is not None and (
+            got_t > want_t * (1.0 + time_tolerance)
+        ):
+            problems.append(
+                f"{r['dataset']}: steady_engine_s_per_event {got_t} > "
+                f"baseline {want_t} + {int(time_tolerance * 100)}%"
             )
     return problems
 

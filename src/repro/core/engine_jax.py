@@ -78,6 +78,11 @@ PRED_OLD, PRED_DELTA, PRED_ALL = 0, 1, 2
 PRED_TSTORE, PRED_TDELTA = 3, 4
 
 
+def _pow2(n: int) -> int:
+    """Smallest power of two >= max(n, 1)."""
+    return 1 << max(int(n) - 1, 0).bit_length()
+
+
 def _pack3(spo: jnp.ndarray) -> jnp.ndarray:
     s = spo[..., 0].astype(jnp.int64)
     p = spo[..., 1].astype(jnp.int64)
@@ -454,10 +459,7 @@ def eval_plan(
     overflow = jnp.zeros((), bool)
     for step, spec in enumerate(plan):
         is_join = not (step == 0 and not spec.bound_items)
-        k, comp = (None, None)
-        if is_join and spec.pred in (PRED_ALL, PRED_TSTORE):
-            k, comp = _index_prefix(spec)
-        if k is None or spec.count_appl:
+        if spec.count_appl or not is_join:
             ok = _epoch_ok(epoch, marked, tomb, r, spec.pred)
             ok = _match_atom(
                 spo, ok, atom_consts[spec.index], spec.const_mask, spec.eq_pairs
@@ -469,23 +471,51 @@ def eval_plan(
             cols = {v: jnp.where(ok, spo[:, p], 0) for v, p in spec.free_items}
             valid = ok
             cols, valid, ov = _compact(cols, valid, bind_cap)
-            overflow |= ov
-        elif k is not None:
-            cols, valid, ov = _expand_join_index(
-                cols, valid, spo, epoch, marked, tomb, r,
-                sorted_keys, sort_perm,
-                atom_consts[spec.index], spec, k, comp, bind_cap,
-            )
-            overflow |= ov
         else:
-            cols, valid, ov, _ = _expand_join(
-                cols, valid, spo, ok, spec.bound_items, spec.free_items, bind_cap
+            cols, valid, ov = _join_step(
+                cols, valid, spo, epoch, marked, tomb, r,
+                sorted_keys, sort_perm, atom_consts[spec.index], spec, bind_cap,
             )
-            overflow |= ov
+        overflow |= ov
         if axis is not None and step < len(plan) - 1:
             cols = {v: _gather(c, axis) for v, c in cols.items()}
             valid = _gather(valid, axis)
-    # instantiate head
+    out, out_valid, n_deriv, ov = _emit_heads(
+        cols, valid, head_consts, head_var_slots, out_cap
+    )
+    # bind and out overflow reported separately so the host retry can grow
+    # exactly the capacity that was exhausted
+    return out, out_valid, n_deriv[None], n_appl[None], overflow[None], ov[None]
+
+
+def _join_step(
+    cols, valid, spo, epoch, marked, tomb, r, sorted_keys, sort_perm,
+    consts, spec: _AtomSpec, bind_cap: int,
+):
+    """One join step of a plan, shared by :func:`eval_plan` and
+    :func:`eval_plan_rederive`: an atom whose fixed positions form a
+    packed-key prefix and whose predicate admits every live row
+    (PRED_ALL / PRED_TSTORE) runs as index range scans; the rest take the
+    generic bindings-sorting join.  Returns ``(cols, valid, overflow)``.
+    """
+    if spec.pred in (PRED_ALL, PRED_TSTORE):
+        k, comp = _index_prefix(spec)
+        if k is not None:
+            return _expand_join_index(
+                cols, valid, spo, epoch, marked, tomb, r,
+                sorted_keys, sort_perm, consts, spec, k, comp, bind_cap,
+            )
+    ok = _epoch_ok(epoch, marked, tomb, r, spec.pred)
+    ok = _match_atom(spo, ok, consts, spec.const_mask, spec.eq_pairs)
+    cols, valid, ov, _ = _expand_join(
+        cols, valid, spo, ok, spec.bound_items, spec.free_items, bind_cap
+    )
+    return cols, valid, ov
+
+
+def _emit_heads(cols, valid, head_consts, head_var_slots: tuple, out_cap: int):
+    """Instantiate the head pattern over a binding table and compact it to
+    the output buffer; returns ``(out, out_valid, n_deriv, overflow)``."""
     heads = []
     for pos in range(3):
         v = head_var_slots[pos]
@@ -498,10 +528,90 @@ def eval_plan(
         {"s": out[:, 0], "p": out[:, 1], "o": out[:, 2]}, valid, out_cap
     )
     out = jnp.stack([outc["s"], outc["p"], outc["o"]], axis=1)
-    n_deriv = out_valid.sum().astype(I32)
-    # bind and out overflow reported separately so the host retry can grow
-    # exactly the capacity that was exhausted
-    return out, out_valid, n_deriv[None], n_appl[None], overflow[None], ov[None]
+    return out, out_valid, out_valid.sum().astype(I32), ov
+
+
+def build_rederive_plan(rule: Rule) -> tuple[list[_AtomSpec], tuple[int, ...]]:
+    """The single head-bound plan of a rule for targeted rederivation.
+
+    Delete-side rederivation only ever needs to restore *overdeleted* head
+    instances, so instead of evaluating the whole rule against the surviving
+    store the join is chained backward from the head: the head variables are
+    pre-bound (to the overdeleted instances — see
+    ``incremental_spmd._head_bindings``) and every body atom matches the
+    surviving live store (``PRED_TSTORE``).  Body atoms are greedily
+    reordered so each step shares a variable with the already-bound set
+    where possible — bound positions then form packed-key prefixes and the
+    join runs as range queries on the persistent sorted index.
+
+    Returns ``(specs, head_vars)`` where ``head_vars`` is the head's
+    first-occurrence variable order — the column order the seed table must
+    use (``_AtomSpec.index`` keeps the original atom index for constant
+    lookup).
+    """
+    head_vars = tuple(dict.fromkeys(t for t in rule.head if is_var(t)))
+    remaining = list(range(len(rule.body)))
+    bound: set[int] = set(head_vars)
+    specs: list[_AtomSpec] = []
+    while remaining:
+        j = next(
+            (i for i in remaining
+             if any(is_var(t) and t in bound for t in rule.body[i])),
+            remaining[0],
+        )
+        remaining.remove(j)
+        const_mask, eq_pairs, b, f = _atom_static(rule.body[j], bound)
+        specs.append(_AtomSpec(j, const_mask, eq_pairs, b, f, PRED_TSTORE))
+        bound |= {v for v, _ in b} | {v for v, _ in f}
+    return specs, head_vars
+
+
+def eval_plan_rederive(
+    spo,
+    epoch,
+    marked,
+    tomb,
+    sorted_keys,
+    sort_perm,
+    atom_consts,  # (n_atoms, 3) traced rule constants (vars hold garbage 0)
+    head_consts,  # (3,) traced
+    seeds,        # (seed_cap, n_seed_vars) replicated head-variable bindings
+    seed_valid,   # (seed_cap,) replicated
+    plan: tuple,  # static tuple of _AtomSpec from build_rederive_plan
+    head_var_slots: tuple,
+    seed_vars: tuple,  # static: variable id per seed column
+    bind_cap: int,
+    out_cap: int,
+    axis: str | None = None,
+):
+    """Head-bound rederivation join; returns (heads, valid, n_deriv, ovs...).
+
+    The binding table starts from the replicated seed columns instead of an
+    arena scan, so every join intermediate — and every sort — scales with
+    the overdelete delta, never with the surviving arena.  Atoms whose fixed
+    positions form a packed-key prefix probe the persistent sorted index
+    (:func:`_expand_join_index`); the rest take the generic
+    bindings-sorting join.  Mirrors :func:`eval_plan`'s SPMD discipline:
+    bindings are all_gathered between atoms, the final join's results stay
+    local.
+    """
+    r = jnp.zeros((), I32)  # PRED_TSTORE ignores the round counter
+    cols = {v: seeds[:, i].astype(I32) for i, v in enumerate(seed_vars)}
+    valid = seed_valid
+    overflow = jnp.zeros((), bool)
+    for step, spec in enumerate(plan):
+        cols, valid, ov = _join_step(
+            cols, valid, spo, epoch, marked, tomb, r,
+            sorted_keys, sort_perm, atom_consts[spec.index], spec, bind_cap,
+        )
+        overflow |= ov
+        if axis is not None and step < len(plan) - 1:
+            cols = {v: _gather(c, axis) for v, c in cols.items()}
+            valid = _gather(valid, axis)
+    out, out_valid, n_deriv, ov_out = _emit_heads(
+        cols, valid, head_consts, head_var_slots, out_cap
+    )
+    return out, out_valid, n_deriv[None], overflow[None], ov_out[None]
 
 
 def process_candidates(
@@ -886,6 +996,7 @@ class JaxEngine:
         seed_chunk: int = 2048,
         delta_out_cap: int | None = None,
         use_kernel: bool = False,
+        rederive_mode: str = "targeted",
     ) -> None:
         self.n_resources = n_resources
         self.capacity = capacity
@@ -931,6 +1042,13 @@ class JaxEngine:
         # permanently.
         self._delta_fallback = False
         self._fallback_ops = 0
+        # delete-side rederivation strategy: "targeted" chains the rederive
+        # join backward from the overdeleted head instances (the default);
+        # "requeue" keeps the historical whole-rule re-evaluation — retained
+        # as the differential-testing baseline (tests/test_incremental_spmd)
+        if rederive_mode not in ("targeted", "requeue"):
+            raise ValueError(f"unknown rederive_mode {rederive_mode!r}")
+        self.rederive_mode = rederive_mode
         self.use_kernel = use_kernel
         self.mesh = mesh
         self.axis = axis if mesh is not None else None
@@ -1293,6 +1411,42 @@ class JaxEngine:
         if self._fallback_ops % 4 == 0:
             self._delta_fallback = False
 
+    def _presize_delta(self, n_rows: int) -> None:
+        """Pre-size the delta buffers for a KNOWN cardinality — the admitted
+        batch or the finalised overdelete delta — so mid-stream width
+        discovery (overflow -> rollback -> growth -> recompile, repeated)
+        never fires for a width the driver can predict up front.  The
+        narrow delta caps grow to cover ``n_rows`` (clamped at the wide
+        caps, matching the overflow path's clamp); a cardinality exceeding
+        even the wide caps grows those too — *without* a restart, since
+        this runs at a phase boundary with no buffers in flight.
+
+        ``n_rows`` is a GLOBAL cardinality while every cap is per shard
+        (``_pad_cands``: global stream width = cap x n_shards), so the
+        target width divides by the shard count — a skewed row
+        distribution is the overflow retry's job, exactly as for any other
+        per-shard buffer.
+        """
+        if n_rows <= 0:
+            return
+        need = _pow2(-(-n_rows // self.n_shards))
+        grew: set = set()
+        for attr, wide in (
+            ("delta_out", "out_cap"),
+            ("delta_bind", "bind_cap"),
+            ("delta_rewrite", "rewrite_cap"),
+        ):
+            if getattr(self, wide) < need:
+                grew.add((self._CAP_FAMILY[wide], getattr(self, wide)))
+                setattr(self, wide, need)
+            target = min(need, getattr(self, wide))
+            if getattr(self, attr) < target:
+                grew.add((self._CAP_FAMILY[attr], getattr(self, attr)))
+                setattr(self, attr, target)
+        self._set_update_buffers(True)
+        if grew:
+            self._evict_stale_fns(grew)
+
     def _ensure_index(self, state: EngineState) -> None:
         """(Re)build the persistent sorted index if it is stale.
 
@@ -1400,9 +1554,17 @@ class JaxEngine:
         (:mod:`repro.serve.triple_store`)."""
         self._restore(state, snap)
         old_cap = self.capacity
-        self._grow_for(str(err))
+        kind = str(err)
+        self._grow_for(kind)
         if self.capacity != old_cap:
             self._grow_state_arena(state, old_cap)
+        # restart bookkeeping (BENCH_incremental records these per profile):
+        # every retry rolls the operation back; growing a WIDE cap
+        # additionally recompiles every fn keyed on the outgrown width —
+        # the "wide-growth discovery" cost _presize_delta exists to avoid
+        state.stats.capacity_retries += 1
+        if kind in ("bind", "out", "out_cap", "rewrite"):
+            state.stats.wide_growth_restarts += 1
 
     def _barrier(self, state: EngineState) -> None:
         """The epoch barrier: an update operation's fixpoint is complete.
@@ -1599,8 +1761,84 @@ class JaxEngine:
             if stats is not None:
                 stats.derivations += int(np.asarray(n_d).sum())
                 stats.rule_applications += int(np.asarray(n_a).sum())
+                if full_plan:
+                    stats.full_plan_evals += 1
             out.append((heads, valid))
         return out
+
+    def _get_rederive_fn(self, key, plan, head_slots, seed_vars, bind_cap, out_cap):
+        if key not in self._fns:
+            a = self.axis
+            fn = partial(
+                eval_plan_rederive,
+                plan=plan,
+                head_var_slots=head_slots,
+                seed_vars=seed_vars,
+                bind_cap=bind_cap,
+                out_cap=out_cap,
+                axis=a,
+            )
+            d = P(a) if a else None
+            rpl = P() if a else None
+            self._fns[key] = self._wrap(
+                fn,
+                in_specs=(d, d, d, d, d, d, rpl, rpl, rpl, rpl),
+                out_specs=(d, d, d, d, d),
+            )
+        return self._fns[key]
+
+    def _eval_rule_rederive(self, state: EngineState, k: int, rule: Rule, seeds):
+        """Backward-chained, head-bound evaluation of one rule — the
+        delete-side targeted rederivation step.
+
+        ``seeds`` is the (m, n_head_vars) host table of head-variable
+        bindings extracted from the overdeleted instances
+        (``incremental_spmd._head_bindings``, column order =
+        :func:`build_rederive_plan`'s ``head_vars``).  The body joins run
+        against the surviving live store through the persistent sorted
+        index, so join width scales with the overdelete delta — never the
+        arena.  Returns the restored instances as host (n, 3) rows.
+        """
+        plan, seed_vars = build_rederive_plan(rule)
+        atom_consts = np.zeros((len(rule.body), 3), np.int32)
+        for j, atom in enumerate(rule.body):
+            for pos, t in enumerate(atom):
+                atom_consts[j, pos] = 0 if is_var(t) else t
+        head_consts = np.asarray(
+            [0 if is_var(t) else t for t in rule.head], np.int32
+        )
+        head_slots = tuple(t if is_var(t) else None for t in rule.head)
+        seeds = np.asarray(seeds, np.int32)
+        if seeds.ndim != 2 or seeds.shape[1] != len(seed_vars):
+            raise ValueError(
+                f"seed table shape {seeds.shape} does not match the head's "
+                f"variable order {seed_vars} (see build_rederive_plan)"
+            )
+        cap = max(64, _pow2(seeds.shape[0]))
+        pad = cap - seeds.shape[0]
+        seeds_j = jnp.asarray(np.pad(seeds, ((0, pad), (0, 0))), I32)
+        valid_j = jnp.asarray(np.arange(cap) < seeds.shape[0])
+        bind_cap, out_cap = self._active_bind, self._active_delta_out
+        stats = state.stats
+        stats.rederive_seed_rows += int(seeds.shape[0])
+        stats.rederive_join_width = max(stats.rederive_join_width, cap)
+        fn = self._get_rederive_fn(
+            ("rplan", k, tuple(plan), head_slots, seed_vars,
+             ("bind", bind_cap), ("out", out_cap), cap),
+            tuple(plan), head_slots, seed_vars, bind_cap, out_cap,
+        )
+        out, valid, n_d, ov_bind, ov_out = fn(
+            state.spo, state.epoch, state.marked, state.tomb,
+            state.sorted_keys, state.sort_perm,
+            jnp.asarray(atom_consts), jnp.asarray(head_consts),
+            seeds_j, valid_j,
+        )
+        if bool(np.asarray(ov_bind).any()):
+            raise CapacityError(self._active_bind_kind)
+        if bool(np.asarray(ov_out).any()):
+            raise CapacityError(self._active_delta_kind)
+        stats.derivations += int(np.asarray(n_d).sum())
+        return np.asarray(out).reshape(-1, 3)[np.asarray(valid).reshape(-1)]
 
     # -- public API ----------------------------------------------------------
     def materialise_state(

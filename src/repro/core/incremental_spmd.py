@@ -34,12 +34,19 @@ with the backward closure run on-device as *epoch-tagged tombstones*:
    invariant the forward predicates rely on.
 4. *Split + rederive*: the host splits suspect cliques
    (:func:`repro.core.uf.split_cliques` — only rho bookkeeping leaves the
-   device), re-rewrites the base program under the split rho, and seeds the
-   shared forward loop with (a) still-explicit triples whose normal form
-   went missing and (b) missing reflexive witnesses of surviving resources,
-   while requeueing for full re-evaluation every rule whose head pattern can
-   restore an overdeleted fact.  Re-merging then happens through the normal
-   round machinery (``merge_pairs_jax`` + the Algorithm-3 sweep).
+   device), re-rewrites the base program under the split rho, and runs
+   **targeted rederivation**: for each rule whose head pattern can restore
+   an overdeleted fact, the head variables are pre-bound to the overdeleted
+   instances (:func:`_head_bindings` on the finalised tombstone set) and
+   the body is chained backward through the persistent sorted index
+   (:func:`repro.core.engine_jax.eval_plan_rederive`) — the B/F refinement
+   of DRed's rederive step, with join cost proportional to the overdelete
+   delta rather than the surviving store.  The restored instances seed the
+   shared forward loop together with (a) still-explicit triples whose
+   normal form went missing and (b) missing reflexive witnesses of
+   surviving resources; only variable-free heads still fall back to a
+   whole-rule requeue.  Re-merging then happens through the normal round
+   machinery (``merge_pairs_jax`` + the Algorithm-3 sweep).
 
 Correctness oracle (tests/test_incremental_spmd.py + the differential fuzz
 harness in tests/test_incremental.py): after any update sequence the state
@@ -65,6 +72,7 @@ from .engine_jax import (
     _compact as _engine_compact,
     _index_remove,
     _pack3,
+    _pow2,
     _route_rows,
 )
 from .terms import SAME_AS, is_var
@@ -241,6 +249,22 @@ def _finalize_tombs(spo, epoch, marked, tomb, sorted_keys, sort_perm, rep, *, ax
     return marked, tomb, sorted_keys, sort_perm, od_mask, n_od[None]
 
 
+def _extract_tombed(spo, tomb, *, axis, cap):
+    """Compact the overdeleted rows (``tomb >= 0``) — the finalised
+    tombstone set that drives targeted rederivation.  Must run BEFORE
+    :func:`_finalize_tombs` resets ``tomb``; ``cap`` is sized from the
+    host's running overdelete count (a global bound, hence per-shard
+    sufficient), so the overflow flag only fires if the driver miscounted.
+    """
+    del axis  # per-shard compaction; the host concatenates the blocks
+    tombed = tomb >= 0
+    cols, valid, ov = _engine_compact(
+        {"s": spo[:, 0], "p": spo[:, 1], "o": spo[:, 2]}, tombed, cap
+    )
+    rows = jnp.stack([cols["s"], cols["p"], cols["o"]], axis=1)
+    return rows, valid, ov[None]
+
+
 def _member(sorted_keys, q, qv, *, axis):
     """Replicated membership of query triples among live store rows.
 
@@ -317,6 +341,14 @@ def _finalize_fn(engine):
     return _get_step_fn(
         engine, "finalize_tombs", _finalize_tombs,
         in_specs=(d, d, d, d, d, d, rpl), out_specs=(d, d, d, d, rpl, rpl),
+    )
+
+
+def _extract_fn(engine, cap: int):
+    d, rpl = _specs(engine)
+    return _get_step_fn(
+        engine, "extract_od", _extract_tombed,
+        in_specs=(d, d), out_specs=(d, d, d), cap=cap,
     )
 
 
@@ -409,6 +441,41 @@ def _head_may_rederive(rule, od_mask: np.ndarray, rep_old: np.ndarray) -> bool:
     return True
 
 
+def _head_bindings(rule, od_rows: np.ndarray, rep_old: np.ndarray):
+    """Head-variable bindings of the overdeleted instances matching
+    ``rule``'s head pattern, or ``None`` for a variable-free head.
+
+    The exact (row-wise) version of :func:`_head_may_rederive`'s
+    per-position relaxation, sharing its pre-/post-split correspondence:
+    ``od_rows`` are normal forms under the PRE-deletion rho while the rule
+    is rewritten under the post-split rho, so head constants are collapsed
+    through ``rep_old`` before comparing (a split only refines cliques, so
+    ``rep_old[rho_split(c)] == rep_old[c]``).  Variable positions need no
+    mapping: a restorable instance binds its head variables from surviving
+    store rows, whose values are pre-deletion representatives already —
+    bindings holding a *split* representative simply match nothing live
+    (those facts come back through the explicit re-insertion seeds).
+
+    Rows are deduplicated; column order is the head's first-occurrence
+    variable order — the seed-table contract of
+    :func:`repro.core.engine_jax.build_rederive_plan`.
+    """
+    m = np.ones(od_rows.shape[0], dtype=bool)
+    first: dict[int, int] = {}
+    for pos, t in enumerate(rule.head):
+        if is_var(t):
+            if t in first:
+                m &= od_rows[:, pos] == od_rows[:, first[t]]
+            else:
+                first[t] = pos
+        else:
+            m &= od_rows[:, pos] == rep_old[t]
+    if not first:
+        return None
+    cols = [od_rows[m, pos] for pos in first.values()]
+    return np.unique(np.stack(cols, axis=1), axis=0).astype(np.int32)
+
+
 # ---------------------------------------------------------------------------
 # drivers (called by JaxEngine.add_facts / delete_facts inside enable_x64)
 # ---------------------------------------------------------------------------
@@ -437,6 +504,7 @@ def spmd_add_phases(engine, state: EngineState, delta, max_rounds: int):
         state.rep = jnp.asarray(np.concatenate([rep_host, ext]))
     state.explicit = np.concatenate([state.explicit, delta], axis=0)
     state.stats.triples_explicit = state.explicit.shape[0]
+    engine._presize_delta(delta.shape[0])  # known admitted-batch cardinality
     cands, cand_valid = engine._pad_cands(delta)
     yield "prepared"
     engine._forward(state, cands, cand_valid, [], max_rounds)
@@ -460,8 +528,10 @@ def spmd_delete_phases(engine, state: EngineState, delta, max_rounds: int):
         arena now HIDES overdeleted rows that rederivation will restore —
         the mid-round state an epoch snapshot must never expose),
       * ``"split"`` — suspect cliques reverted to singletons and the program
-        re-rewritten under the split rho; the rederive/forward fixpoint then
-        runs to completion and the generator ends.
+        re-rewritten under the split rho,
+      * ``"rederive"`` — the targeted (head-bound, backward-chained)
+        rederivation joins have produced their restored instances; the
+        forward fixpoint then runs to completion and the generator ends.
 
     Same contract as :func:`spmd_add_phases`: exhaust or roll back; a
     no-effect delta yields nothing.
@@ -494,7 +564,7 @@ def spmd_delete_phases(engine, state: EngineState, delta, max_rounds: int):
         owner = nf[:, 0] % engine.n_shards
     # owner-sorted queries: each shard's matches land in contiguous runs
     nf = dedup_rows(nf[np.argsort(owner, kind="stable")])
-    _seed_query(engine, state, nf)
+    n_od_host = _seed_query(engine, state, nf)
     yield "seeded"
 
     # wave-1 frontier masks come from the seed normal forms themselves
@@ -523,10 +593,37 @@ def spmd_delete_phases(engine, state: EngineState, delta, max_rounds: int):
             # kind must be named or the (clamped) delta cap would stop
             # growing and the retry loop would spin on the same overflow
             raise CapacityError(engine._active_delta_kind)
-        if int(np.asarray(n_new).reshape(-1)[0]) == 0:
+        n_wave = int(np.asarray(n_new).reshape(-1)[0])
+        if n_wave == 0:
             break
+        n_od_host += n_wave
         masks = np.asarray(od_masks)
         yield "wave"
+
+    # pre-size the delta buffers from the now-known overdelete cardinality:
+    # the rederive seeds and the restored candidate stream scale with it,
+    # and discovering that width by overflow restarts mid-stream is the
+    # direct mechanism behind the uobm_like steady-event regression
+    engine._presize_delta(max(n_od_host, delta.shape[0]))
+
+    # grab the overdeleted rows for the head-bound rederive joins while the
+    # tombstone column still identifies them (finalize resets it to -1)
+    od_rows = np.zeros((0, 3), np.int32)
+    if n_od_host and engine.rederive_mode == "targeted":
+        rows, rv, ov = _extract_fn(engine, _pow2(n_od_host))(
+            state.spo, state.tomb
+        )
+        if bool(np.asarray(ov).any()):
+            # the extract buffer is sized from the host's running count, so
+            # overflow means the count itself is wrong — an invariant
+            # violation no capacity growth can fix; surfacing it as a
+            # CapacityError would spin the retry loop growing unrelated
+            # caps against the same miscount forever
+            raise RuntimeError(
+                "overdelete extraction overflowed its host-counted bound "
+                f"({n_od_host} rows) — tombstone accounting is inconsistent"
+            )
+        od_rows = np.asarray(rows).reshape(-1, 3)[np.asarray(rv).reshape(-1)]
 
     (
         state.marked, state.tomb, state.sorted_keys, state.sort_perm,
@@ -548,17 +645,43 @@ def spmd_delete_phases(engine, state: EngineState, delta, max_rounds: int):
     state.program = p_split
     yield "split"
 
-    # -- rederive: requeue rules that can restore an overdeleted fact --------
+    # -- rederive: restore overdeleted facts still derivable from survivors --
+    # Targeted (default): for each rule whose head pattern can match an
+    # overdeleted instance, bind the head variables to those instances and
+    # chain the body backward through the persistent sorted index — the
+    # DRed/B-F one-step rederivation, with cost proportional to the
+    # overdelete delta.  The restored instances seed the forward fixpoint,
+    # whose delta discipline finds every consequence.  Whole-rule requeue
+    # (evaluating the rule unconstrained against the surviving store)
+    # remains only for variable-free heads — a head with no variables
+    # admits no instance constraint — and as the "requeue" differential
+    # baseline.
     od_mask_h = np.asarray(od_mask)
     requeued = []
+    rederived: list[np.ndarray] = []
     if n_od:
         for k, rule in enumerate(p_split.rules):
-            if _head_may_rederive(rule, od_mask_h, rep_host):
+            if not _head_may_rederive(rule, od_mask_h, rep_host):
+                continue
+            if engine.rederive_mode != "targeted":
                 requeued.append(k)
+                state.stats.rederive_full_fallback += 1
+                continue
+            bind = _head_bindings(rule, od_rows, rep_host)
+            if bind is None:
+                requeued.append(k)
+                state.stats.rederive_full_fallback += 1
+            elif bind.shape[0]:
+                heads = engine._eval_rule_rederive(state, k, rule, bind)
+                state.stats.rederive_targeted += 1
+                if heads.shape[0]:
+                    rederived.append(heads)
+    yield "rederive"
 
-    # seeds: explicit rows whose (post-split) normal form went missing, and
-    # missing reflexive witnesses of resources surviving in the store
-    seeds = []
+    # seeds: the rederived instances, explicit rows whose (post-split)
+    # normal form went missing, and missing reflexive witnesses of
+    # resources surviving in the store
+    seeds = rederived
     if explicit_new.shape[0]:
         nf_exp = rep_split[explicit_new].astype(np.int32)
         miss = ~_member_query(engine, state, nf_exp)

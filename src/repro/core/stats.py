@@ -29,6 +29,13 @@ class MatStats:
     index_rebuilds: int = 0         # full argsorts of the arena index (<=1/epoch)
     overdeleted: int = 0            # rows tombstoned across deletes
     suspects_split: int = 0         # sameAs cliques split + re-merged
+    rederive_targeted: int = 0      # delete-side rules evaluated head-bound
+    rederive_full_fallback: int = 0 # delete-side whole-rule requeues (const heads)
+    rederive_seed_rows: int = 0     # overdeleted head instances joined backward
+    rederive_join_width: int = 0    # widest padded rederive seed table
+    full_plan_evals: int = 0        # unconstrained full-plan rule evaluations
+    capacity_retries: int = 0       # mid-operation rollback+grow restarts
+    wide_growth_restarts: int = 0   # retries that grew a wide (base-run) cap
     triples_total: int = 0          # arena rows used (marked + unmarked)
     triples_unmarked: int = 0
     triples_explicit: int = 0

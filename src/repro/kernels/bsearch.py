@@ -81,6 +81,49 @@ def search_bounds(
     return lo[:n, 0], hi[:n, 0]
 
 
+def prefix_range_bounds(
+    prefix_cols,
+    keys,
+    *,
+    block: int = 256,
+    tile: int = 1024,
+    interpret: bool = True,
+) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """(start, end) index ranges of (s, p, o)-prefix queries in sorted keys.
+
+    The kernel form of the persistent-index range probe the engine's
+    head-bound joins issue per binding (``_expand_join_index`` /
+    ``eval_plan_rederive``): an atom whose fixed positions form a length-k
+    prefix of the packed (s, p, o) key order matches exactly the keys in
+    ``[pack(prefix, 0...), pack(prefix, max...)]``, so its range is one
+    lower bound of the low key and one upper bound of the high key — both
+    produced by the same counting kernel in a single fused call (low and
+    high queries concatenated).
+
+    ``prefix_cols`` is an (n, k) int array of the leading fixed positions,
+    1 <= k <= 3, values below ``2**21`` (the engine's ID width).  Returns
+    int32 arrays with ``start[i]:end[i]`` the half-open match range of
+    query ``i``.
+    """
+    import numpy as np
+
+    pc = np.asarray(prefix_cols, np.int64)
+    n, k = pc.shape
+    if not 1 <= k <= 3:
+        raise ValueError(f"prefix length must be 1..3, got {k}")
+    maxid = np.int64((1 << 21) - 1)
+    lo = np.zeros(n, np.int64)
+    hi = np.zeros(n, np.int64)
+    for j in range(3):
+        lo = (lo << 21) | (pc[:, j] if j < k else 0)
+        hi = (hi << 21) | (pc[:, j] if j < k else maxid)
+    lower, upper = search_bounds(
+        np.concatenate([lo, hi]), keys, block=block, tile=tile,
+        interpret=interpret,
+    )
+    return lower[:n], upper[n:]
+
+
 @functools.partial(jax.jit, static_argnames=("block", "tile", "interpret"))
 def _search_bounds_call(qhi, qlo, khi, klo, *, block, tile, interpret):
     grid = (qhi.shape[0] // block, khi.shape[0] // tile)

@@ -10,7 +10,10 @@ from __future__ import annotations
 
 import jax
 
-from .bsearch import search_bounds as _search_bounds
+from .bsearch import (
+    prefix_range_bounds as _prefix_range_bounds,
+    search_bounds as _search_bounds,
+)
 from .embedding_bag import embedding_bag as _embedding_bag
 from .flash_attention import flash_attention_bhsd as _flash_attention_bhsd
 from .fm_interact import fm_interact as _fm_interact
@@ -34,6 +37,11 @@ def rewrite_triples(spo, rho, **kw):
 def search_bounds(queries, keys, **kw):
     kw.setdefault("interpret", INTERPRET)
     return _search_bounds(queries, keys, **kw)
+
+
+def prefix_range_bounds(prefix_cols, keys, **kw):
+    kw.setdefault("interpret", INTERPRET)
+    return _prefix_range_bounds(prefix_cols, keys, **kw)
 
 
 def embedding_bag(ids, table, **kw):

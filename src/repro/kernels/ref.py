@@ -26,6 +26,23 @@ def search_bounds_ref(queries, keys):
     return lo.astype(np.int32), hi.astype(np.int32)
 
 
+def prefix_range_bounds_ref(prefix_cols, keys):
+    # numpy (not jnp): int64 packed keys must survive without the x64 flag
+    import numpy as np
+
+    pc = np.asarray(prefix_cols, np.int64)
+    keys = np.asarray(keys, np.int64)
+    maxid = np.int64((1 << 21) - 1)
+    lo = np.zeros(pc.shape[0], np.int64)
+    hi = np.zeros(pc.shape[0], np.int64)
+    for j in range(3):
+        lo = (lo << 21) | (pc[:, j] if j < pc.shape[1] else 0)
+        hi = (hi << 21) | (pc[:, j] if j < pc.shape[1] else maxid)
+    start = np.searchsorted(keys, lo, side="left")
+    end = np.searchsorted(keys, hi, side="right")
+    return start.astype(np.int32), end.astype(np.int32)
+
+
 def embedding_bag_ref(ids: jnp.ndarray, table: jnp.ndarray) -> jnp.ndarray:
     return table[ids].sum(axis=1)
 

@@ -17,8 +17,10 @@ expand answers to cliques).  Concretely:
 
   * maintenance operations advance through the resumable *phases* of
     :func:`~repro.core.incremental_spmd.spmd_add_phases` /
-    :func:`~repro.core.incremental_spmd.spmd_delete_phases`, one phase per
-    scheduler tick;
+    :func:`~repro.core.incremental_spmd.spmd_delete_phases`
+    (adds: ``prepared``; deletes: ``seeded`` / ``wave``... /
+    ``overdeleted`` / ``split`` / ``rederive``), one phase per scheduler
+    tick;
   * a :class:`~repro.core.engine_jax.StoreSnapshot` is published only at the
     epoch barrier (operation fixpoint reached) — built lazily on first read
     (unread epochs cost no host copy), from the in-flight operation's

@@ -26,6 +26,14 @@ def test_bench_smoke_row_schema():
     ops = row["per_event"]["ops"]
     assert row["n_warmup"] == len({*ops})
     assert len(row["per_event"]["engine_s"]) == 3
+    # engine-path health counters recorded per profile (ISSUE 5 satellite)
+    counters = row["engine_counters"]
+    assert {
+        "index_rebuilds", "capacity_retries", "wide_growth_restarts",
+        "rederive_targeted", "rederive_full_fallback", "rederive_seed_rows",
+        "rederive_join_width", "full_plan_evals",
+    } <= set(counters)
+    assert all(isinstance(v, int) and v >= 0 for v in counters.values())
     # steady means exist iff a non-warm-up event exists, and then exclude
     # the warm-up events consistently
     steady_events = [
@@ -72,4 +80,43 @@ def test_compare_incremental_gate():
     # a fresh null speedup against a real baseline is a regression
     assert compare_incremental(
         [{"dataset": "a", "speedup_engine_vs_scratch": None}], baseline
+    ) != []
+
+
+def test_compare_incremental_gates_steady_time():
+    """The absolute wall-clock axis: a per-event blow-up fails the gate even
+    when the speedup column barely moves (the PR 4 uobm_like regression —
+    committed speedup so small that the relative gate was vacuous), while
+    ordinary engine wall-clock jitter (~30-50% run-to-run at CPU scale)
+    stays inside the wider time tolerance."""
+    baseline = {"rows": [
+        {"dataset": "uobm", "speedup_engine_vs_scratch": 0.0015,
+         "steady_engine_s_per_event": 7.30},
+        {"dataset": "ok", "speedup_engine_vs_scratch": 1.0,
+         "steady_engine_s_per_event": 1.0},
+    ]}
+    fresh = [
+        {"dataset": "uobm", "speedup_engine_vs_scratch": 0.0013,
+         "steady_engine_s_per_event": 11.93},  # +63% per event: fail
+        {"dataset": "ok", "speedup_engine_vs_scratch": 1.1,
+         "steady_engine_s_per_event": 1.45},   # +45% jitter: within 60%
+    ]
+    problems = compare_incremental(fresh, baseline, tolerance=0.2)
+    assert len(problems) == 1
+    assert problems[0].startswith("uobm:")
+    assert "steady_engine_s_per_event" in problems[0]
+    # a faster-per-event run passes; missing time columns are skipped
+    assert compare_incremental(
+        [{"dataset": "uobm", "speedup_engine_vs_scratch": 0.0015,
+          "steady_engine_s_per_event": 5.0}], baseline
+    ) == []
+    assert compare_incremental(
+        [{"dataset": "uobm", "speedup_engine_vs_scratch": 0.0015,
+          "steady_engine_s_per_event": None}], baseline
+    ) == []
+    # the time axis is independently tunable
+    assert compare_incremental(
+        [{"dataset": "ok", "speedup_engine_vs_scratch": 1.0,
+          "steady_engine_s_per_event": 1.45}], baseline,
+        time_tolerance=0.3,
     ) != []

@@ -349,3 +349,84 @@ def test_member_rejects_key_max_padding_match():
         qv = jnp.asarray([True, True])
         hit = _member(sorted_keys, q, qv, axis=None)
         assert np.asarray(hit).tolist() == [True, False]
+
+
+def test_head_may_rederive_pre_post_split_mapping():
+    """The ISSUE 5 satellite-2 corner, pinned at the unit level: overdelete
+    masks (and the extracted tombstone rows) hold PRE-split normal forms,
+    while the rule is rewritten under the POST-split rho — a head constant
+    that is a non-representative member of a split clique must be collapsed
+    through the pre-deletion rho before matching.  The naive post-split
+    check would skip the rule and lose a restorable fact."""
+    from repro.core.incremental_spmd import _head_bindings, _head_may_rederive
+
+    # pre-split clique {1, 2, 3} with representative 1; resources 4 and 5
+    # are singletons.  Post-split, constant 3 reverts to itself.
+    rep_old = np.asarray([0, 1, 1, 1, 4, 5], np.int32)
+    # the overdeleted instance, normal under the PRE-split rho: its object
+    # slot holds the old representative 1, not the member 3
+    od = np.asarray([[5, 4, 1]], np.int32)
+    od_mask = np.zeros((3, 6), bool)
+    for pos in range(3):
+        od_mask[pos][od[:, pos]] = True
+    rule = Rule((-1, 4, 3), ((-1, 5, -2),))  # head (?x, :p4, :c3) post-split
+
+    assert _head_may_rederive(rule, od_mask, rep_old)
+    assert not od_mask[2][3]  # the naive post-split lookup would say False
+
+    # the exact row-wise filter agrees and extracts the ?x binding
+    bind = _head_bindings(rule, od, rep_old)
+    assert bind.tolist() == [[5]]
+
+
+def test_head_bindings_eq_vars_dedup_and_const_head():
+    """_head_bindings semantics: repeated head variables filter row-wise,
+    bindings deduplicate, mismatching constants drop rows, and a
+    variable-free head returns None (the whole-rule fallback signal)."""
+    from repro.core.incremental_spmd import _head_bindings
+
+    rep = np.arange(12, dtype=np.int32)
+    od = np.asarray(
+        [[7, 4, 7], [7, 4, 8], [9, 4, 9], [7, 4, 7], [7, 5, 7]], np.int32
+    )
+    # head (?x, :p4, ?x): only rows with s == o and p == 4, deduplicated
+    rule_eq = Rule((-1, 4, -1), ((-1, 5, -2),))
+    assert _head_bindings(rule_eq, od, rep).tolist() == [[7], [9]]
+    # head (?x, :p4, ?y): two-column bindings, deduplicated
+    rule_xy = Rule((-1, 4, -2), ((-1, 5, -2),))
+    assert _head_bindings(rule_xy, od, rep).tolist() == [
+        [7, 7], [7, 8], [9, 9],
+    ]
+    # no overdeleted row matches p = 6: empty binding table
+    rule_p6 = Rule((-1, 6, -2), ((-1, 5, -2),))
+    assert _head_bindings(rule_p6, od, rep).shape == (0, 2)
+    # variable-free head: no instance constraint exists
+    rule_const = Rule((7, 4, 7), ((-1, 5, -2),))
+    assert _head_bindings(rule_const, od, rep) is None
+
+
+def test_build_rederive_plan_orders_bound_atoms_first():
+    """The head-bound plan chains backward: atoms sharing a variable with
+    the bound set come first (so their fixed positions form index-prefix
+    range probes), and every atom matches the surviving store
+    (PRED_TSTORE)."""
+    from repro.core.engine_jax import PRED_TSTORE, build_rederive_plan
+
+    # head (?x, 4, ?z) <- (?y, 5, ?z) & (?x, 5, ?y): written delta-first
+    # order starts at an atom NOT sharing ?x; the rederive plan must pick
+    # the ?z-sharing atom anyway (both share a head var here), then chain
+    rule = Rule((-1, 4, -3), ((-2, 5, -3), (-1, 5, -2)))
+    plan, head_vars = build_rederive_plan(rule)
+    assert head_vars == (-1, -3)
+    assert [s.pred for s in plan] == [PRED_TSTORE, PRED_TSTORE]
+    # first picked atom binds a head var; the second is fully chained
+    first, second = plan
+    assert any(v in (-1, -3) for v, _ in first.bound_items)
+    assert {v for v, _ in second.bound_items} >= {-2}
+
+    # a body atom with NO head-var overlap anywhere still gets a plan
+    rule2 = Rule((-1, 4, -1), ((-2, 5, -3), (-1, 6, -1)))
+    plan2, hv2 = build_rederive_plan(rule2)
+    assert hv2 == (-1,)
+    # the ?x atom is evaluated first despite being written second
+    assert plan2[0].index == 1

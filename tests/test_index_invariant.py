@@ -223,6 +223,33 @@ def test_no_arena_sort_in_round_fns():
                     )
                     assert _sorts_at_least(jx.jaxpr, arena_rows) == 0, rule
 
+        # the targeted rederive joins obey the same budget: seed table and
+        # binding sorts are cap-sized, the arena is only range-probed
+        from repro.core.engine_jax import build_rederive_plan, eval_plan_rederive
+
+        for rule in prog.rules:
+            plan, seed_vars = build_rederive_plan(rule)
+            if not seed_vars:
+                continue  # variable-free head: whole-rule fallback instead
+            consts = jnp.zeros((len(rule.body), 3), I32)
+            hc = jnp.zeros((3,), I32)
+            slots = tuple(
+                t if isinstance(t, int) and t < 0 else None
+                for t in rule.head
+            )
+            seeds = jnp.zeros((64, len(seed_vars)), I32)
+            sv = jnp.zeros((64,), bool)
+            fn = partial(
+                eval_plan_rederive, plan=tuple(plan), head_var_slots=slots,
+                seed_vars=seed_vars, bind_cap=eng.bind_cap,
+                out_cap=eng.out_cap, axis=None,
+            )
+            jx = jax.make_jaxpr(fn)(
+                state.spo, state.epoch, state.marked, state.tomb,
+                state.sorted_keys, state.sort_perm, consts, hc, seeds, sv,
+            )
+            assert _sorts_at_least(jx.jaxpr, arena_rows) == 0, rule
+
 
 def test_rebuild_counter_budget_over_stream():
     """<= one full argsort per mutation epoch across a whole update stream:

@@ -46,6 +46,30 @@ def test_search_bounds_sweep(nq, nk, big):
     np.testing.assert_array_equal(hi, rhi)
 
 
+@pytest.mark.parametrize("nq,nk", [(9, 50), (300, 1000)])
+@pytest.mark.parametrize("k", [1, 2, 3])
+def test_prefix_range_bounds_sweep(nq, nk, k):
+    """The bound-head probe of the targeted rederive join: a length-k
+    (s, p, o) prefix matches one contiguous range of the sorted packed-key
+    column.  IDs are drawn small so ranges are frequently non-empty."""
+    ids = RNG.integers(0, 12, (nk, 3)).astype(np.int64)
+    keys = np.sort((ids[:, 0] << 42) | (ids[:, 1] << 21) | ids[:, 2])
+    prefixes = RNG.integers(0, 14, (nq, k)).astype(np.int32)
+    start, end = ops.prefix_range_bounds(prefixes, keys)
+    rstart, rend = ref.prefix_range_bounds_ref(prefixes, keys)
+    np.testing.assert_array_equal(start, rstart)
+    np.testing.assert_array_equal(end, rend)
+    assert (end >= start).all()
+    # spot-check: every row inside a range actually carries the prefix
+    shift = 21 * (3 - k)
+    packed_pref = np.zeros(nq, np.int64)
+    for j in range(k):
+        packed_pref = (packed_pref << 21) | prefixes[:, j]
+    for i in range(min(nq, 32)):
+        rows = keys[start[i]:end[i]]
+        assert ((rows >> shift) == packed_pref[i]).all()
+
+
 @pytest.mark.parametrize("b,f,v,k", [(4, 3, 50, 8), (130, 39, 1000, 10), (64, 26, 513, 16)])
 @pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
 def test_embedding_bag_sweep(b, f, v, k, dtype):

@@ -174,6 +174,40 @@ def test_query_admitted_between_overdelete_and_rederive():
     assert after.answer == evaluate(q, ref.triples(), ref.rep, dic)
 
 
+def test_query_admitted_at_rederive_phase_reads_published_snapshot():
+    """The targeted-rederivation phase ("rederive": head-bound joins done,
+    forward fixpoint still pending) is a scheduler yield point like any
+    other — a query admitted there must be served at the previous epoch's
+    fixpoint, not the live mid-operation arena."""
+    facts, prog, dic = generate(
+        n_groups=1, group_size=4, n_spokes_per=3, n_plain=0,
+        hierarchy_depth=0, seed=0,
+    )
+    store = TripleStore(facts, prog, dic, engine=_engine(dic))
+    spoke = dic.id_of(":spoke")
+    q = Query([(-1, spoke, -2)], [], [-1], False)
+    baseline = store.query_now(q)
+
+    idp = dic.id_of(":idProp")
+    edge = facts[np.flatnonzero(facts[:, 1] == idp)[:1]]
+    store.submit_update("delete", edge)
+    ticks = 0
+    while store.inflight_phase != "rederive":
+        store.step()
+        ticks += 1
+        assert ticks < 100, "never reached the rederive phase"
+    mid = store.submit_query(q)
+    store.step()
+    assert mid.status == "done" and mid.epoch == 0
+    assert mid.answer == baseline.answer
+
+    store.drain()
+    after = store.query_now(q)
+    assert after.epoch == 1
+    ref = materialise_rew(apply_op(facts, "delete", edge), prog, dic.n_resources)
+    assert after.answer == evaluate(q, ref.triples(), ref.rep, dic)
+
+
 def test_split_then_query_old_representative_expands_post_split():
     """Clique split followed immediately by a query over the old
     representative: the answer must expand through the POST-split rho."""
