@@ -85,7 +85,7 @@ def run_one(
     eng_state = eng.materialise_state(facts, program)
     eng_base_s = time.perf_counter() - t0
 
-    host_ev, eng_ev, scr_ev = [], [], []
+    host_ev, eng_ev, scr_ev, disp_ev = [], [], [], []
     explicit = facts
     for op, delta in events:
         explicit = _apply_explicit(explicit, op, delta)
@@ -94,9 +94,11 @@ def run_one(
         (add_facts if op == "add" else delete_facts)(host_state, delta)
         host_ev.append(time.perf_counter() - t0)
 
+        d0 = eng.dispatches.total
         t0 = time.perf_counter()
         (eng.add_facts if op == "add" else eng.delete_facts)(eng_state, delta)
         eng_ev.append(time.perf_counter() - t0)
+        disp_ev.append(eng.dispatches.total - d0)
 
         t0 = time.perf_counter()
         ref = materialise_rew(explicit, program, dic.n_resources)
@@ -113,6 +115,7 @@ def run_one(
         )
 
     host_ev, eng_ev, scr_ev = map(np.asarray, (host_ev, eng_ev, scr_ev))
+    disp_ev = np.asarray(disp_ev)
     # warm-up (each op kind's first occurrence, where the engine pays jit
     # compilation) is excluded from the steady means CONSISTENTLY: a stream
     # of nothing but first occurrences reports null steady columns instead
@@ -135,6 +138,11 @@ def run_one(
         return round(num / max(den, 1e-9), 4)
 
     sh, se, ss = mean(host_ev, steady), mean(eng_ev, steady), mean(scr_ev, steady)
+    # steady compiled-call dispatches per event (the ROADMAP dispatch floor
+    # the fused-fixpoint work must lower; repro.core.stats.DispatchCounter
+    # via the engine fn cache).  Same warm-up exclusion as the time columns:
+    # first occurrences also pay the one-off cache fills.
+    sd = mean(disp_ev.astype(float), steady)
     est = eng_state.stats
     return {
         "dataset": name,
@@ -152,6 +160,10 @@ def run_one(
         "speedup_host_vs_scratch": ratio(ss, sh),
         "speedup_engine_vs_scratch": ratio(ss, se),
         "speedup_engine_vs_host": ratio(sh, se),
+        "dispatches_per_event": rnd(sd, 2),
+        "dispatch_families": {
+            k: int(v) for k, v in sorted(eng.dispatches.by_family.items())
+        },
         # engine-path health counters over the whole stream: how often the
         # arena index was argsorted, how many mid-op rollback restarts fired
         # (and how many grew a wide cap — the recompile-heavy kind), and how
@@ -172,6 +184,7 @@ def run_one(
             "host_s": [round(float(x), 4) for x in host_ev],
             "engine_s": [round(float(x), 4) for x in eng_ev],
             "scratch_s": [round(float(x), 4) for x in scr_ev],
+            "dispatches": [int(x) for x in disp_ev],
         },
     }
 
@@ -221,6 +234,12 @@ def main(profiles=None, out_json: str | None = None) -> list[dict]:
             ),
             "rows": rows,
         }
+        # embed the trace-audit report (jaxpr invariant passes + dispatch
+        # cross-check) so the bench JSON carries the full perf contract —
+        # run.py --check fails on violations as well as on row regressions
+        from repro.analysis import run_report
+
+        doc["audit"] = run_report("pex")
         with open(out_json, "w") as fh:
             json.dump(doc, fh, indent=2)
         print(f"[bench_incremental] wrote {out_json}")

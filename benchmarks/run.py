@@ -15,10 +15,14 @@
 the incremental section (without overwriting the JSON) and exit non-zero if
 any dataset regressed against the committed BENCH_incremental.json
 baseline — ``speedup_engine_vs_scratch`` (machine-normalised) by more than
-``tolerance`` (default 0.2 = 20%), or ``steady_engine_s_per_event``
+``tolerance`` (default 0.2 = 20%), ``steady_engine_s_per_event``
 (absolute wall-clock backstop, so a profile with a tiny committed speedup
 is still gated against per-event blow-ups) by more than the wider
-``max(3 * tolerance, 0.6)``.
+``max(3 * tolerance, 0.6)``, or ``dispatches_per_event`` (the compiled-call
+dispatch floor, machine-INdependent — ROADMAP's fused-fixpoint metric) by
+more than ``tolerance``.  The gate also reruns the jaxpr trace audit
+(``repro.analysis``) and fails on any invariant violation or dispatch
+cross-check problem.
 """
 
 from __future__ import annotations
@@ -54,7 +58,15 @@ def compare_incremental(
         the speedup axis because raw engine wall-clock varies ~30-50%
         run-to-run at CPU bench scale (XLA compile/dispatch jitter), and
         it IS machine-dependent — regenerate the baseline on the CI
-        machine before trusting a bare time gate.
+        machine before trusting a bare time gate;
+      * ``dispatches_per_event`` rising more than ``tolerance`` above the
+        committed value — the steady compiled-call dispatch count per
+        maintenance event (repro.analysis's DispatchAuditor, counted at
+        the engine fn cache).  Deterministic for a given rule set and
+        update stream — no timing jitter — so it shares the tight speedup
+        tolerance; it is the before/after metric of the ROADMAP's
+        fused-fixpoint item, and a silent extra dispatch per round is
+        exactly what it exists to catch.
 
     Datasets missing from either side, or null on the baseline side, are
     skipped per-metric.  Pure so the tier-1 bench smoke can pin the gate's
@@ -84,11 +96,21 @@ def compare_incremental(
                 f"{r['dataset']}: steady_engine_s_per_event {got_t} > "
                 f"baseline {want_t} + {int(time_tolerance * 100)}%"
             )
+        want_d = b.get("dispatches_per_event")
+        got_d = r.get("dispatches_per_event")
+        if want_d is not None and got_d is not None and (
+            got_d > want_d * (1.0 + tolerance)
+        ):
+            problems.append(
+                f"{r['dataset']}: dispatches_per_event {got_d} > "
+                f"baseline {want_d} + {int(tolerance * 100)}%"
+            )
     return problems
 
 
 def check(tolerance: float = 0.2) -> int:
-    """Run the incremental bench and gate it against the committed JSON."""
+    """Run the incremental bench and gate it against the committed JSON,
+    then rerun the jaxpr trace audit — both must be clean."""
     from benchmarks import bench_incremental
 
     if not os.path.exists(BASELINE):
@@ -98,12 +120,24 @@ def check(tolerance: float = 0.2) -> int:
         baseline_doc = json.load(fh)
     rows = bench_incremental.main(out_json=None)
     problems = compare_incremental(rows, baseline_doc, tolerance)
+
+    from repro.analysis import run_report
+
+    audit = run_report("pex")
+    problems += [
+        f"audit: [{v['pass_name']}] {v['fn']}: {v['primitive']} at {v['path']}"
+        for v in audit["violations"]
+    ]
+    problems += [f"audit: {p}" for p in audit["dispatch"]["problems"]]
     if problems:
-        print("[check] FAIL: engine-vs-scratch speedup regressed")
+        print("[check] FAIL: bench regression or trace-audit violation")
         for p in problems:
             print("  -", p)
         return 1
-    print(f"[check] OK: no dataset regressed >{int(tolerance * 100)}% vs baseline")
+    print(
+        f"[check] OK: no dataset regressed >{int(tolerance * 100)}% vs "
+        "baseline; trace audit clean"
+    )
     return 0
 
 

@@ -56,7 +56,7 @@ from repro.compat import shard_map as compat_shard_map
 from repro.kernels.merge import merge_sorted
 
 from .rules import Program, Rule
-from .stats import MatStats
+from .stats import DispatchCounter, MatStats
 from .terms import DIFFERENT_FROM, SAME_AS, is_var
 from .uf import FrozenRho, compress_np, merge_pairs_jax
 
@@ -969,6 +969,78 @@ class StoreSnapshot:
         return len(self.rho)
 
 
+# -- auditable-fn registry (repro.analysis) ---------------------------------
+#
+# Every compiled fn family the engine dispatches registers a *trace builder*
+# here: ``builder(engine, state)`` yields ``(label, jaxpr)`` pairs covering
+# the family's variants at the caller's probe geometry.  ``repro.analysis``
+# runs its invariant passes over the full registry — a new hot fn that does
+# not register is caught by the dispatch cross-check instead (its runtime
+# family shows up in no phase profile).  ``skip_passes`` names passes whose
+# invariant the family is deliberately exempt from (each exemption is a
+# documented cost decision, not a loophole — see docs/analysis.md).
+
+@dataclass(frozen=True)
+class AuditableFn:
+    name: str
+    builder: callable
+    skip_passes: tuple = ()
+
+
+AUDIT_REGISTRY: dict[str, AuditableFn] = {}
+
+
+def register_auditable(name: str, skip_passes: tuple = ()):
+    def deco(builder):
+        AUDIT_REGISTRY[name] = AuditableFn(name, builder, tuple(skip_passes))
+        return builder
+
+    return deco
+
+
+def _rebuild_index(spo, epoch, marked):
+    """Full index rebuild: the ONE allowed arena argsort (per mutation epoch)."""
+    live = (epoch >= 0) & ~marked
+    keys = jnp.where(live, _pack3(spo), KEY_MAX)
+    perm = jnp.argsort(keys)
+    return perm.astype(I32), keys[perm]
+
+
+def _squeeze_stream(cands, valid, *, target):
+    """Compact a bucketed candidate stream to ``target`` rows (+ overflow)."""
+    cols, v, ov = _compact(
+        {"s": cands[:, 0], "p": cands[:, 1], "o": cands[:, 2]}, valid, target,
+    )
+    out = jnp.stack([cols["s"], cols["p"], cols["o"]], axis=1)
+    return out, v, ov[None]
+
+
+class _CountedFn:
+    """Callable wrapper counting dispatches through the engine's fn cache.
+
+    Counting wraps the *call*, not the cache fetch — the maintenance host
+    helpers fetch a fn once and call it per chunk, and the dispatch floor
+    the ROADMAP tracks is calls, not fetches."""
+
+    __slots__ = ("fn", "family", "counter")
+
+    def __init__(self, fn, family: str, counter: DispatchCounter) -> None:
+        self.fn = fn
+        self.family = family
+        self.counter = counter
+
+    def __call__(self, *args):
+        self.counter.record(self.family)
+        return self.fn(*args)
+
+
+def _key_family(key) -> str:
+    """The fn family of a cache key: its head, unwrapping tagged heads
+    like ``("od", n_heads)``."""
+    head = key[0] if isinstance(key, tuple) else key
+    return head if isinstance(head, str) else head[0]
+
+
 class JaxEngine:
     """REW materialisation with static capacities; single-device or SPMD.
 
@@ -1054,6 +1126,10 @@ class JaxEngine:
         self.axis = axis if mesh is not None else None
         self.n_shards = int(np.prod(mesh.devices.shape)) if mesh is not None else 1
         self._fns: dict = {}
+        # runtime half of the dispatch auditor: every call through the fn
+        # cache is recorded by family (+ the maintenance phase, when one is
+        # tagged); repro.analysis cross-checks against the static profile
+        self.dispatches = DispatchCounter()
 
     @classmethod
     def from_config(cls, cfg, mesh=None, axis: str = "data", **overrides):
@@ -1081,6 +1157,18 @@ class JaxEngine:
             )
         )
 
+    def _register_fn(self, key, fn) -> "_CountedFn":
+        """Install a compiled fn in the cache under dispatch accounting.
+
+        Every cache fill goes through here (``("padbuf", ...)`` entries are
+        device *buffers*, not fns — they bypass this and stay uncounted) so
+        each subsequent call records one dispatch under the key's family.
+        """
+        counted = _CountedFn(fn, _key_family(key), self.dispatches)
+        self.dispatches.record_compile(counted.family)
+        self._fns[key] = counted
+        return counted
+
     # buffer family of each growable cap attr: cache keys tag every cap
     # value with its family, so eviction after growth is precise even when
     # two different buffers happen to share a width
@@ -1104,11 +1192,11 @@ class JaxEngine:
             )
             d = P(a) if a else None
             rpl = P() if a else None
-            self._fns[plan_key] = self._wrap(
+            self._register_fn(plan_key, self._wrap(
                 fn,
                 in_specs=(d, d, d, d, d, d, rpl, rpl, rpl),
                 out_specs=(d, d, d, d, d, d),
-            )
+            ))
         return self._fns[plan_key]
 
     def _get_squeeze_fn(self, n_rows: int, target: int):
@@ -1125,17 +1213,11 @@ class JaxEngine:
         key = ("squeeze", n_rows, ("out", target))
         if key not in self._fns:
             a = self.axis
-
-            def fn(cands, valid):
-                cols, v, ov = _compact(
-                    {"s": cands[:, 0], "p": cands[:, 1], "o": cands[:, 2]},
-                    valid, target,
-                )
-                out = jnp.stack([cols["s"], cols["p"], cols["o"]], axis=1)
-                return out, v, ov[None]
-
+            fn = partial(_squeeze_stream, target=target)
             d = P(a) if a else None
-            self._fns[key] = self._wrap(fn, in_specs=(d, d), out_specs=(d, d, d))
+            self._register_fn(
+                key, self._wrap(fn, in_specs=(d, d), out_specs=(d, d, d))
+            )
         return self._fns[key]
 
     def _get_process_fn(self, n_cand_rows: int):
@@ -1170,11 +1252,11 @@ class JaxEngine:
                 "delta_rows": d,
                 "delta_valid": d,
             }
-            self._fns[key] = self._wrap(
+            self._register_fn(key, self._wrap(
                 fn,
                 in_specs=(d, d, d, d, rpl, d, d, d, d, rpl),
                 out_specs=(d, d, d, d, rpl, d, d, flag_specs),
-            )
+            ))
         return self._fns[key]
 
     # -- state lifecycle -----------------------------------------------------
@@ -1460,15 +1542,12 @@ class JaxEngine:
             return
         key = ("rebuild_index",)
         if key not in self._fns:
-            def fn(spo, epoch, marked):
-                live = (epoch >= 0) & ~marked
-                keys = jnp.where(live, _pack3(spo), KEY_MAX)
-                perm = jnp.argsort(keys)
-                return perm.astype(I32), keys[perm]
-
             a = self.axis
             d = P(a) if a else None
-            self._fns[key] = self._wrap(fn, in_specs=(d, d, d), out_specs=(d, d))
+            self._register_fn(
+                key,
+                self._wrap(_rebuild_index, in_specs=(d, d, d), out_specs=(d, d)),
+            )
         state.sort_perm, state.sorted_keys = self._fns[key](
             state.spo, state.epoch, state.marked
         )
@@ -1780,11 +1859,11 @@ class JaxEngine:
             )
             d = P(a) if a else None
             rpl = P() if a else None
-            self._fns[key] = self._wrap(
+            self._register_fn(key, self._wrap(
                 fn,
                 in_specs=(d, d, d, d, d, d, rpl, rpl, rpl, rpl),
                 out_specs=(d, d, d, d, d),
-            )
+            ))
         return self._fns[key]
 
     def _eval_rule_rederive(self, state: EngineState, k: int, rule: Rule, seeds):
@@ -1969,3 +2048,91 @@ class JaxEngine:
         state = self.materialise_state(facts, program, max_rounds)
         spo = self.state_triples(state)
         return spo, self.state_rep(state), state.stats
+
+
+# -- audit trace builders (repro.analysis) ----------------------------------
+#
+# Builders trace each fn family at the CALLER's probe geometry (the supplied
+# engine/state), single-device and un-jitted — jaxpr-level invariants are
+# about which primitives the fn binds at which shapes, not about how XLA
+# compiles them, and the SPMD wrappers only add shard_map plumbing around
+# the same body.
+
+def _trace_rule_plans(engine, state, rule, k):
+    atom_consts = jnp.zeros((len(rule.body), 3), I32)
+    head_consts = jnp.zeros((3,), I32)
+    head_slots = tuple(t if is_var(t) else None for t in rule.head)
+    for mode, full, tomb in (
+        ("delta", False, False), ("full", True, False), ("tomb", False, True),
+    ):
+        for i, plan in enumerate(build_plans(rule, full=full, tombstone=tomb)):
+            fn = partial(
+                eval_plan, plan=tuple(plan), head_var_slots=head_slots,
+                bind_cap=engine.bind_cap, out_cap=engine.out_cap, axis=None,
+            )
+            jx = jax.make_jaxpr(fn)(
+                state.spo, state.epoch, state.marked, state.tomb,
+                state.sorted_keys, state.sort_perm,
+                jnp.asarray(1, I32), atom_consts, head_consts,
+            )
+            yield f"plan:rule{k}:{mode}:{i}", jx
+
+
+@register_auditable("plan")
+def _audit_plan(engine, state):
+    for k, rule in enumerate(state.program.rules):
+        yield from _trace_rule_plans(engine, state, rule, k)
+
+
+@register_auditable("rplan")
+def _audit_rplan(engine, state):
+    for k, rule in enumerate(state.program.rules):
+        plan, seed_vars = build_rederive_plan(rule)
+        if not seed_vars:
+            continue  # variable-free head: whole-rule requeue fallback
+        head_slots = tuple(t if is_var(t) else None for t in rule.head)
+        fn = partial(
+            eval_plan_rederive, plan=tuple(plan), head_var_slots=head_slots,
+            seed_vars=seed_vars, bind_cap=engine.bind_cap,
+            out_cap=engine.out_cap, axis=None,
+        )
+        jx = jax.make_jaxpr(fn)(
+            state.spo, state.epoch, state.marked, state.tomb,
+            state.sorted_keys, state.sort_perm,
+            jnp.zeros((len(rule.body), 3), I32), jnp.zeros((3,), I32),
+            jnp.zeros((64, len(seed_vars)), I32), jnp.zeros((64,), bool),
+        )
+        yield f"rplan:rule{k}", jx
+
+
+@register_auditable("process")
+def _audit_process(engine, state):
+    fn = partial(
+        process_candidates, rewrite_cap=engine.rewrite_cap, axis=None,
+        n_shards=1, route_cap=None, pair_cap=engine.pair_cap,
+    )
+    cands = jnp.zeros((engine.out_cap, 3), I32)
+    cv = jnp.zeros((engine.out_cap,), bool)
+    jx = jax.make_jaxpr(fn)(
+        state.spo, state.epoch, state.marked, state.n_used, state.rep,
+        state.sort_perm, state.sorted_keys, cands, cv, jnp.asarray(1, I32),
+    )
+    yield "process", jx
+
+
+@register_auditable("squeeze")
+def _audit_squeeze(engine, state):
+    wide = 2 * engine.out_cap
+    fn = partial(_squeeze_stream, target=engine.out_cap)
+    jx = jax.make_jaxpr(fn)(
+        jnp.zeros((wide, 3), I32), jnp.zeros((wide,), bool),
+    )
+    yield "squeeze", jx
+
+
+@register_auditable("rebuild_index", skip_passes=("NoArenaSort",))
+def _audit_rebuild_index(engine, state):
+    # the ONE allowed arena argsort (<= once per mutation epoch, counted by
+    # stats.index_rebuilds) — exempt from NoArenaSort by design
+    jx = jax.make_jaxpr(_rebuild_index)(state.spo, state.epoch, state.marked)
+    yield "rebuild_index", jx

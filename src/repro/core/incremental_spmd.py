@@ -74,6 +74,7 @@ from .engine_jax import (
     _pack3,
     _pow2,
     _route_rows,
+    register_auditable,
 )
 from .terms import SAME_AS, is_var
 from .triples import dedup_rows, pack, setdiff_rows
@@ -84,6 +85,7 @@ __all__ = [
     "spmd_add_phases",
     "spmd_delete_facts",
     "spmd_delete_phases",
+    "static_dispatch_profile",
 ]
 
 
@@ -303,9 +305,9 @@ def _get_step_fn(engine, name, fn, in_specs, out_specs, **static):
     )
     if key not in engine._fns:
         a = engine.axis
-        engine._fns[key] = engine._wrap(
+        engine._register_fn(key, engine._wrap(
             partial(fn, axis=a, **static), in_specs=in_specs, out_specs=out_specs
-        )
+        ))
     return engine._fns[key]
 
 
@@ -492,22 +494,28 @@ def spmd_add_phases(engine, state: EngineState, delta, max_rounds: int):
     retry restarts the phases from scratch against the restored state.
     A no-effect delta yields nothing.
     """
-    engine._ensure_index(state)  # rebuild only after a capacity re-layout
-    delta = dedup_rows(delta)
-    delta = setdiff_rows(delta, state.explicit)
-    if delta.shape[0] == 0:
-        return
-    hi = int(delta.max()) + 1
-    if hi > state.n_res:  # unseen resource IDs: extend rho with identities
-        rep_host = np.asarray(state.rep)
-        ext = np.arange(rep_host.shape[0], hi, dtype=rep_host.dtype)
-        state.rep = jnp.asarray(np.concatenate([rep_host, ext]))
-    state.explicit = np.concatenate([state.explicit, delta], axis=0)
-    state.stats.triples_explicit = state.explicit.shape[0]
-    engine._presize_delta(delta.shape[0])  # known admitted-batch cardinality
-    cands, cand_valid = engine._pad_cands(delta)
-    yield "prepared"
-    engine._forward(state, cands, cand_valid, [], max_rounds)
+    tag = engine.dispatches
+    try:
+        tag.phase = "add:prepare"
+        engine._ensure_index(state)  # rebuild only after a capacity re-layout
+        delta = dedup_rows(delta)
+        delta = setdiff_rows(delta, state.explicit)
+        if delta.shape[0] == 0:
+            return
+        hi = int(delta.max()) + 1
+        if hi > state.n_res:  # unseen resource IDs: extend rho with identities
+            rep_host = np.asarray(state.rep)
+            ext = np.arange(rep_host.shape[0], hi, dtype=rep_host.dtype)
+            state.rep = jnp.asarray(np.concatenate([rep_host, ext]))
+        state.explicit = np.concatenate([state.explicit, delta], axis=0)
+        state.stats.triples_explicit = state.explicit.shape[0]
+        engine._presize_delta(delta.shape[0])  # known admitted-batch cardinality
+        cands, cand_valid = engine._pad_cands(delta)
+        yield "prepared"
+        tag.phase = "add:forward"
+        engine._forward(state, cands, cand_valid, [], max_rounds)
+    finally:
+        tag.phase = None
 
 
 def spmd_add_facts(engine, state: EngineState, delta, max_rounds: int) -> EngineState:
@@ -536,6 +544,15 @@ def spmd_delete_phases(engine, state: EngineState, delta, max_rounds: int):
     Same contract as :func:`spmd_add_phases`: exhaust or roll back; a
     no-effect delta yields nothing.
     """
+    tag = engine.dispatches
+    try:
+        yield from _delete_phases_tagged(engine, state, delta, max_rounds, tag)
+    finally:
+        tag.phase = None
+
+
+def _delete_phases_tagged(engine, state, delta, max_rounds, tag):
+    tag.phase = "delete:prepare"
     engine._ensure_index(state)  # rebuild only after a capacity re-layout
     delta = dedup_rows(delta)
     if delta.shape[0] and state.explicit.shape[0]:
@@ -564,8 +581,10 @@ def spmd_delete_phases(engine, state: EngineState, delta, max_rounds: int):
         owner = nf[:, 0] % engine.n_shards
     # owner-sorted queries: each shard's matches land in contiguous runs
     nf = dedup_rows(nf[np.argsort(owner, kind="stable")])
+    tag.phase = "delete:seed"
     n_od_host = _seed_query(engine, state, nf)
     yield "seeded"
+    tag.phase = "delete:wave"
 
     # wave-1 frontier masks come from the seed normal forms themselves
     masks = np.zeros((3, state.n_res), dtype=bool)
@@ -600,6 +619,7 @@ def spmd_delete_phases(engine, state: EngineState, delta, max_rounds: int):
         masks = np.asarray(od_masks)
         yield "wave"
 
+    tag.phase = "delete:finalize"
     # pre-size the delta buffers from the now-known overdelete cardinality:
     # the rederive seeds and the restored candidate stream scale with it,
     # and discovering that width by overflow restarts mid-stream is the
@@ -644,6 +664,7 @@ def spmd_delete_phases(engine, state: EngineState, delta, max_rounds: int):
     state.rep = jnp.asarray(rep_split.astype(np.int32))
     state.program = p_split
     yield "split"
+    tag.phase = "delete:rederive"
 
     # -- rederive: restore overdeleted facts still derivable from survivors --
     # Targeted (default): for each rule whose head pattern can match an
@@ -703,6 +724,7 @@ def spmd_delete_phases(engine, state: EngineState, delta, max_rounds: int):
     state.explicit = explicit_new
     state.stats.triples_explicit = explicit_new.shape[0]
     cj, cv = engine._pad_cands(cands)
+    tag.phase = "delete:forward"
     engine._forward(state, cj, cv, requeued, max_rounds)
 
 
@@ -711,3 +733,118 @@ def spmd_delete_facts(engine, state: EngineState, delta, max_rounds: int) -> Eng
     for _phase in spmd_delete_phases(engine, state, delta, max_rounds):
         pass
     return state
+
+
+# ---------------------------------------------------------------------------
+# dispatch auditor (static half) + audit trace builders (repro.analysis)
+# ---------------------------------------------------------------------------
+
+def static_dispatch_profile(program=None) -> dict:
+    """Which compiled-fn families each maintenance phase may dispatch.
+
+    The static half of the DispatchAuditor.  Keys are the phase labels the
+    generators tag on ``engine.dispatches``; values map each admissible fn
+    family to its static dispatch count per unit of that phase — per
+    forward ROUND, per overdelete WAVE, per query CHUNK, or per OPERATION —
+    the dispatch floor the ROADMAP's fused-fixpoint item is trying to
+    lower.  With ``program`` the plan counts are exact for that rule set
+    (one delta/tomb plan per body atom; mask filtering and full-plan
+    requeues make the observed count vary around them); without it they are
+    ``None`` (family admissible, count unstated).  The runtime counter
+    (:class:`repro.core.stats.DispatchCounter`) is reconciled against this
+    table by :func:`repro.analysis.dispatch_crosscheck` — a family
+    dispatching inside a phase that does not list it means a compiled fn
+    joined a hot path without declaring itself to the auditor.
+    """
+    n_plans = (
+        sum(len(r.body) for r in program.rules) if program is not None else None
+    )
+    n_rules = len(program.rules) if program is not None else None
+    # the shared forward round: one process step, the delta plans, and at
+    # most one squeeze of the bucketed candidate stream
+    forward = {"process": 1, "plan": n_plans, "squeeze": 1}
+    return {
+        "add:prepare": {"rebuild_index": 1},          # only if index dirty
+        "add:forward": dict(forward),                 # per round
+        "delete:prepare": {"rebuild_index": 1},       # only if index dirty
+        "delete:seed": {"seed_tombs": 1},             # per query chunk
+        "delete:wave": {"plan": n_plans, "squeeze": 1, "od": 1},  # per wave
+        "delete:finalize": {"extract_od": 1, "finalize_tombs": 1},
+        # per matching rule, plus the seed membership/occupancy probes that
+        # assemble the forward seeds (member: per query chunk)
+        "delete:rederive": {"rplan": n_rules, "member": 1, "occupancy": 1},
+        "delete:forward": dict(forward),
+    }
+
+
+# Builders trace the per-shard step fns exactly as dispatched (single
+# device, un-jitted) at the caller's probe geometry.  The ``od`` /
+# ``finalize_tombs`` / ``occupancy`` exemptions are deliberate: their
+# per-``n_res`` mask reductions scatter arena-length update streams by
+# design (the accepted DRed bookkeeping cost), and the arena-length probes
+# stay gather-based.
+
+def _audit_chunk(engine):
+    q = jnp.zeros((engine.seed_chunk, 3), I32)
+    qv = jnp.zeros((engine.seed_chunk,), bool)
+    return q, qv
+
+
+@register_auditable("seed_tombs")
+def _audit_seed_tombs(engine, state):
+    q, qv = _audit_chunk(engine)
+    fn = partial(_seed_tombs, axis=None)
+    jx = jax.make_jaxpr(fn)(
+        state.sorted_keys, state.sort_perm, state.epoch, state.marked,
+        state.tomb, q, qv,
+    )
+    yield "seed_tombs", jx
+
+
+@register_auditable("od", skip_passes=("NoArenaScatter",))
+def _audit_od(engine, state):
+    n_heads = engine.delta_out
+    fn = partial(
+        _od_step, axis=None, n_shards=1, route_cap=None,
+        refl_cap=engine.delta_out,
+    )
+    jx = jax.make_jaxpr(fn)(
+        state.spo, state.epoch, state.marked, state.tomb,
+        state.sorted_keys, state.sort_perm, state.rep,
+        jnp.zeros((state.n_res,), I32), jnp.zeros((state.n_res,), bool),
+        jnp.zeros((n_heads, 3), I32), jnp.zeros((n_heads,), bool),
+        jnp.asarray(1, I32),
+    )
+    yield "od", jx
+
+
+@register_auditable("finalize_tombs", skip_passes=("NoArenaScatter",))
+def _audit_finalize_tombs(engine, state):
+    fn = partial(_finalize_tombs, axis=None)
+    jx = jax.make_jaxpr(fn)(
+        state.spo, state.epoch, state.marked, state.tomb,
+        state.sorted_keys, state.sort_perm, state.rep,
+    )
+    yield "finalize_tombs", jx
+
+
+@register_auditable("extract_od")
+def _audit_extract_od(engine, state):
+    fn = partial(_extract_tombed, axis=None, cap=64)
+    jx = jax.make_jaxpr(fn)(state.spo, state.tomb)
+    yield "extract_od", jx
+
+
+@register_auditable("member")
+def _audit_member(engine, state):
+    q, qv = _audit_chunk(engine)
+    fn = partial(_member, axis=None)
+    jx = jax.make_jaxpr(fn)(state.sorted_keys, q, qv)
+    yield "member", jx
+
+
+@register_auditable("occupancy", skip_passes=("NoArenaScatter",))
+def _audit_occupancy(engine, state):
+    fn = partial(_occupancy, axis=None)
+    jx = jax.make_jaxpr(fn)(state.spo, state.epoch, state.marked, state.rep)
+    yield "occupancy", jx

@@ -3,6 +3,50 @@
 from __future__ import annotations
 
 import dataclasses
+from collections import Counter
+
+
+class DispatchCounter:
+    """Runtime side of the dispatch auditor (``JaxEngine.dispatches``).
+
+    Every call through the engine's fn cache records one dispatch under
+    its *family* (the cache-key head: "plan", "process", "seed_tombs", ...)
+    and, when a maintenance generator has tagged the current phase via the
+    ``phase`` attribute, under that ``(phase, family)`` pair.  First-time
+    cache fills are tallied separately in ``compiles`` so steady-state
+    dispatch rates can be read net of compilation.  The static half lives
+    in :func:`repro.core.incremental_spmd.static_dispatch_profile`;
+    :func:`repro.analysis.dispatch_crosscheck` reconciles the two.
+    """
+
+    def __init__(self) -> None:
+        self.by_family: Counter = Counter()
+        self.by_phase: Counter = Counter()   # keyed (phase, family)
+        self.compiles: Counter = Counter()   # first-time cache fills
+        self.phase: str | None = None        # set by the phase generators
+
+    @property
+    def total(self) -> int:
+        return sum(self.by_family.values())
+
+    def record(self, family: str) -> None:
+        self.by_family[family] += 1
+        self.by_phase[(self.phase, family)] += 1
+
+    def record_compile(self, family: str) -> None:
+        self.compiles[family] += 1
+
+    def snapshot(self) -> dict:
+        """Immutable totals for delta-ing around a timed region."""
+        return {
+            "by_family": dict(self.by_family),
+            "total": self.total,
+        }
+
+    def reset(self) -> None:
+        self.by_family.clear()
+        self.by_phase.clear()
+        self.compiles.clear()
 
 
 @dataclasses.dataclass

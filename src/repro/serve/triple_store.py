@@ -187,6 +187,39 @@ class TripleStore:
     def inflight(self) -> UpdateTicket | None:
         return self._inflight
 
+    @property
+    def dispatch_counts(self) -> dict:
+        """Runtime compiled-call dispatch totals of the serving engine.
+
+        ``by_phase`` attributes dispatches to the maintenance phase that
+        issued them (the generators tag ``engine.dispatches``; scheduler
+        retries restart the generator, so retried phases count twice — the
+        real cost).  The static half lives in
+        :func:`repro.core.incremental_spmd.static_dispatch_profile`.
+        """
+        d = self.engine.dispatches
+        return {
+            "total": d.total,
+            "by_family": dict(d.by_family),
+            "by_phase": {
+                f"{ph}/{fam}": n
+                for (ph, fam), n in d.by_phase.items()
+                if ph is not None
+            },
+            "compiles_by_family": dict(d.compiles),
+        }
+
+    def audit(self) -> list[str]:
+        """Cross-check this store's observed dispatches against the static
+        per-phase profile (the serving half of ``repro.analysis``'s
+        DispatchAuditor).  Returns problem strings; empty means every
+        (phase, family) dispatch pair was declared."""
+        from repro.analysis import dispatch_crosscheck  # lazy: serving core
+
+        return dispatch_crosscheck(
+            self.engine.dispatches, self.state.base_program
+        )
+
     def pending(self) -> int:
         """Queued + in-flight work items (0 means ``drain`` would be a no-op)."""
         return (

@@ -34,6 +34,21 @@ def test_bench_smoke_row_schema():
         "rederive_join_width", "full_plan_evals",
     } <= set(counters)
     assert all(isinstance(v, int) and v >= 0 for v in counters.values())
+    # dispatch ledger (ISSUE 6 satellite): per-event compiled-call counts,
+    # steady mean over the same warm-up mask as the time columns, and the
+    # per-family totals the DispatchAuditor reconciles
+    disp = row["per_event"]["dispatches"]
+    assert len(disp) == 3 and all(isinstance(d, int) and d > 0 for d in disp)
+    steady_disp = [d for i, (op, d) in enumerate(zip(ops, disp)) if op in ops[:i]]
+    if steady_disp:
+        assert row["dispatches_per_event"] == round(
+            sum(steady_disp) / len(steady_disp), 2
+        )
+    else:
+        assert row["dispatches_per_event"] is None
+    fams = row["dispatch_families"]
+    assert fams and all(isinstance(v, int) and v > 0 for v in fams.values())
+    assert sum(fams.values()) >= sum(disp)  # stream is a subset of lifetime
     # steady means exist iff a non-warm-up event exists, and then exclude
     # the warm-up events consistently
     steady_events = [
@@ -120,3 +135,29 @@ def test_compare_incremental_gates_steady_time():
           "steady_engine_s_per_event": 1.45}], baseline,
         time_tolerance=0.3,
     ) != []
+
+
+def test_compare_incremental_gates_dispatches():
+    """The dispatch axis: deterministic compiled-call counts share the tight
+    tolerance — a silent extra dispatch per round (the fused-fixpoint
+    metric) fails the gate even when wall-clock noise hides it."""
+    baseline = {"rows": [
+        {"dataset": "a", "speedup_engine_vs_scratch": 1.0,
+         "dispatches_per_event": 10.0},
+        {"dataset": "old", "speedup_engine_vs_scratch": 1.0},  # pre-PR-6 row
+    ]}
+    fresh = [
+        {"dataset": "a", "speedup_engine_vs_scratch": 1.0,
+         "dispatches_per_event": 13.0},  # +30% dispatches: fail
+        {"dataset": "old", "speedup_engine_vs_scratch": 1.0,
+         "dispatches_per_event": 99.0},  # no baseline column: skipped
+    ]
+    problems = compare_incremental(fresh, baseline, tolerance=0.2)
+    assert len(problems) == 1
+    assert problems[0].startswith("a:") and "dispatches_per_event" in problems[0]
+    # within tolerance, improvements, and null fresh columns all pass
+    for d in (11.5, 8.0, None):
+        assert compare_incremental(
+            [{"dataset": "a", "speedup_engine_vs_scratch": 1.0,
+              "dispatches_per_event": d}], baseline,
+        ) == [], d

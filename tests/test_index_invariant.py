@@ -134,34 +134,11 @@ def test_index_invariant_at_serving_epoch_barriers():
 
 # ---------------------------------------------------------------------------
 # the sort-op budget: no arena-length sort primitive inside the round fns
+# (the recursive jaxpr walker lives in repro.analysis — shared with the
+# lint CLI, which audits the same inventory through the engine registry)
 # ---------------------------------------------------------------------------
 
-def _sorts_at_least(jaxpr, n_rows):
-    """Count sort eqns (recursively) whose operands reach ``n_rows`` rows."""
-    hits = 0
-    for eqn in jaxpr.eqns:
-        if eqn.primitive.name == "sort":
-            if any(v.aval.shape and v.aval.shape[0] >= n_rows for v in eqn.invars):
-                hits += 1
-        for sub in _sub_jaxprs(eqn.params):
-            hits += _sorts_at_least(sub, n_rows)
-    return hits
-
-
-def _sub_jaxprs(params):
-    from jax.core import Jaxpr
-    try:
-        from jax.core import ClosedJaxpr
-    except ImportError:  # pragma: no cover - newer jax
-        from jax.extend.core import ClosedJaxpr
-
-    for v in params.values():
-        vs = v if isinstance(v, (list, tuple)) else [v]
-        for x in vs:
-            if isinstance(x, ClosedJaxpr):
-                yield x.jaxpr
-            elif isinstance(x, Jaxpr):
-                yield x
+from repro.analysis import count_sorts_at_least as _sorts_at_least
 
 
 def test_no_arena_sort_in_round_fns():
