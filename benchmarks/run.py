@@ -37,12 +37,31 @@ BASELINE = os.path.join(
     "BENCH_incremental.json",
 )
 
+# Absolute per-profile ceilings on steady ``dispatches_per_event`` — the
+# machine-independent budget of the fused-fixpoint orchestration.  The
+# relative gate above only catches *drift vs the committed baseline*; these
+# pin the level itself, so regenerating the baseline on a regressed build
+# cannot silently ratify a dispatch blow-up.  Values are the fused steady
+# counts (BENCH_incremental.json) with ~2x headroom for stream-shape
+# variation (capacity retries, requeued rounds riding the host body);
+# the host-loop engine (fuse_rounds=False) sits far above every ceiling.
+DISPATCH_CEILINGS: dict[str, float] = {
+    "claros_like": 15.0,    # fused steady 7.5
+    "dbpedia_like": 17.0,   # fused steady 8.2
+    "opencyc_like": 14.0,   # fused steady 7.0
+    "uniprot_like": 15.0,   # fused steady 7.5
+    "uobm_like": 15.0,      # fused steady 7.0
+    "chain_like": 12.0,     # fused steady 6.0 (unfused: 24.0)
+    "clique_like": 11.0,    # fused steady 5.5 (unfused: 21.8)
+}
+
 
 def compare_incremental(
     rows: list[dict],
     baseline_doc: dict,
     tolerance: float = 0.2,
     time_tolerance: float | None = None,
+    dispatch_ceilings: dict | None = None,
 ) -> list[str]:
     """Regressions vs a committed baseline doc, on two axes per dataset:
 
@@ -67,6 +86,12 @@ def compare_incremental(
         tolerance; it is the before/after metric of the ROADMAP's
         fused-fixpoint item, and a silent extra dispatch per round is
         exactly what it exists to catch.
+
+    ``dispatch_ceilings`` (profile -> absolute dispatches_per_event bound)
+    adds a baseline-INdependent axis: a row whose steady dispatch count
+    exceeds its ceiling fails even if the committed baseline is equally
+    bad — the relative gate only sees drift, the ceiling pins the level
+    (see ``DISPATCH_CEILINGS``).  Profiles without a ceiling are skipped.
 
     Datasets missing from either side, or null on the baseline side, are
     skipped per-metric.  Pure so the tier-1 bench smoke can pin the gate's
@@ -105,6 +130,14 @@ def compare_incremental(
                 f"{r['dataset']}: dispatches_per_event {got_d} > "
                 f"baseline {want_d} + {int(tolerance * 100)}%"
             )
+    for r in rows:
+        ceil = (dispatch_ceilings or {}).get(r["dataset"])
+        got_d = r.get("dispatches_per_event")
+        if ceil is not None and got_d is not None and got_d > ceil:
+            problems.append(
+                f"{r['dataset']}: dispatches_per_event {got_d} > absolute "
+                f"ceiling {ceil}"
+            )
     return problems
 
 
@@ -119,7 +152,9 @@ def check(tolerance: float = 0.2) -> int:
     with open(BASELINE) as fh:
         baseline_doc = json.load(fh)
     rows = bench_incremental.main(out_json=None)
-    problems = compare_incremental(rows, baseline_doc, tolerance)
+    problems = compare_incremental(
+        rows, baseline_doc, tolerance, dispatch_ceilings=DISPATCH_CEILINGS
+    )
 
     from repro.analysis import run_report
 

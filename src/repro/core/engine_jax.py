@@ -53,6 +53,7 @@ from jax.sharding import PartitionSpec as P
 
 from repro.compat import shard_map as compat_shard_map
 
+from repro.kernels import ops as kernel_ops
 from repro.kernels.merge import merge_sorted
 
 from .rules import Program, Rule
@@ -173,7 +174,10 @@ def _index_remove(sort_perm, sorted_keys, dead, trash):
     return new_perm, new_keys
 
 
-def _expand_join(cols, valid, spo, ok, bound_items, free_items, out_cap):
+def _expand_join(
+    cols, valid, spo, ok, bound_items, free_items, out_cap,
+    use_kernel=False,
+):
     """Join bindings against (spo, ok) on ``bound_items``; static structure.
 
     bound_items: list of (var, atom_pos) already present in ``cols``.
@@ -195,7 +199,10 @@ def _expand_join(cols, valid, spo, ok, bound_items, free_items, out_cap):
         skey = jnp.zeros(spo.shape[0], dtype=jnp.int64)
         bkey = jnp.zeros(valid.shape[0], dtype=jnp.int64)
     bkey = jnp.where(valid, bkey, KEY_MAX)
-    border = jnp.argsort(bkey)  # bind_cap-sized — the arena is never sorted
+    if use_kernel:  # sort-free Pallas counting-rank dedup (same stable order)
+        border = kernel_ops.dedup_order(bkey)
+    else:
+        border = jnp.argsort(bkey)  # bind_cap-sized — never the arena
     bkey_s = bkey[border]
     # unrolled binary search: the arena-length query side makes the scan
     # loop's per-step dispatch the dominant cost on CPU
@@ -439,6 +446,7 @@ def eval_plan(
     bind_cap: int,
     out_cap: int,
     axis: str | None = None,
+    use_kernel: bool = False,
 ):
     """Evaluate one delta plan; returns (heads (out_cap,3), valid, stats...).
 
@@ -475,6 +483,7 @@ def eval_plan(
             cols, valid, ov = _join_step(
                 cols, valid, spo, epoch, marked, tomb, r,
                 sorted_keys, sort_perm, atom_consts[spec.index], spec, bind_cap,
+                use_kernel=use_kernel,
             )
         overflow |= ov
         if axis is not None and step < len(plan) - 1:
@@ -490,7 +499,7 @@ def eval_plan(
 
 def _join_step(
     cols, valid, spo, epoch, marked, tomb, r, sorted_keys, sort_perm,
-    consts, spec: _AtomSpec, bind_cap: int,
+    consts, spec: _AtomSpec, bind_cap: int, use_kernel: bool = False,
 ):
     """One join step of a plan, shared by :func:`eval_plan` and
     :func:`eval_plan_rederive`: an atom whose fixed positions form a
@@ -508,7 +517,8 @@ def _join_step(
     ok = _epoch_ok(epoch, marked, tomb, r, spec.pred)
     ok = _match_atom(spo, ok, consts, spec.const_mask, spec.eq_pairs)
     cols, valid, ov, _ = _expand_join(
-        cols, valid, spo, ok, spec.bound_items, spec.free_items, bind_cap
+        cols, valid, spo, ok, spec.bound_items, spec.free_items, bind_cap,
+        use_kernel=use_kernel,
     )
     return cols, valid, ov
 
@@ -583,6 +593,7 @@ def eval_plan_rederive(
     bind_cap: int,
     out_cap: int,
     axis: str | None = None,
+    use_kernel: bool = False,
 ):
     """Head-bound rederivation join; returns (heads, valid, n_deriv, ovs...).
 
@@ -603,6 +614,7 @@ def eval_plan_rederive(
         cols, valid, ov = _join_step(
             cols, valid, spo, epoch, marked, tomb, r,
             sorted_keys, sort_perm, atom_consts[spec.index], spec, bind_cap,
+            use_kernel=use_kernel,
         )
         overflow |= ov
         if axis is not None and step < len(plan) - 1:
@@ -630,6 +642,7 @@ def process_candidates(
     n_shards: int = 1,
     route_cap: int | None = None,
     pair_cap: int = 4096,
+    use_kernel: bool = False,
 ):
     """Normalise, merge equalities, sweep, insert — the state-update half of a
     round (Algorithms 3-6 in bulk).  Pure; runs per-shard under shard_map.
@@ -768,7 +781,10 @@ def process_candidates(
 
     # 7) dedup within the stream
     skeys = jnp.where(stream_v, _pack3(stream), KEY_MAX)
-    order = jnp.argsort(skeys, stable=True)
+    if use_kernel:  # sort-free Pallas counting-rank dedup (same stable order)
+        order = kernel_ops.dedup_order(skeys)
+    else:
+        order = jnp.argsort(skeys, stable=True)
     sk = skeys[order]
     uniq = jnp.concatenate([jnp.asarray([True]), sk[1:] != sk[:-1]])
     uniq = uniq & (sk < KEY_MAX)
@@ -1069,6 +1085,7 @@ class JaxEngine:
         delta_out_cap: int | None = None,
         use_kernel: bool = False,
         rederive_mode: str = "targeted",
+        fuse_rounds: bool = True,
     ) -> None:
         self.n_resources = n_resources
         self.capacity = capacity
@@ -1113,7 +1130,12 @@ class JaxEngine:
         # anomalous giant update cannot degrade a delta-scale stream
         # permanently.
         self._delta_fallback = False
-        self._fallback_ops = 0
+        # update_epoch at which fallback mode was (last) entered/probed —
+        # the narrow re-probe schedule is keyed off epoch barriers, which
+        # advance once per operation whether the rounds run host-looped or
+        # as one fused fixpoint (a per-round counter stopped advancing when
+        # the round loop moved on device)
+        self._fallback_since: int | None = None
         # delete-side rederivation strategy: "targeted" chains the rederive
         # join backward from the overdeleted head instances (the default);
         # "requeue" keeps the historical whole-rule re-evaluation — retained
@@ -1122,6 +1144,10 @@ class JaxEngine:
             raise ValueError(f"unknown rederive_mode {rederive_mode!r}")
         self.rederive_mode = rederive_mode
         self.use_kernel = use_kernel
+        # fuse the inner maintenance round loop into one compiled
+        # lax.while_loop fixpoint per pass (repro.core.fused); False keeps
+        # the host-orchestrated per-round loop — the differential baseline
+        self.fuse_rounds = fuse_rounds
         self.mesh = mesh
         self.axis = axis if mesh is not None else None
         self.n_shards = int(np.prod(mesh.devices.shape)) if mesh is not None else 1
@@ -1189,6 +1215,7 @@ class JaxEngine:
                 bind_cap=bind_cap,
                 out_cap=out_cap,
                 axis=a,
+                use_kernel=self.use_kernel,
             )
             d = P(a) if a else None
             rpl = P() if a else None
@@ -1235,6 +1262,7 @@ class JaxEngine:
                 n_shards=self.n_shards,
                 route_cap=self.route_cap if a is not None else None,
                 pair_cap=self.pair_cap,
+                use_kernel=self.use_kernel,
             )
             d = P(a) if a else None
             rpl = P() if a else None
@@ -1344,7 +1372,7 @@ class JaxEngine:
             by_value = (
                 isinstance(key, tuple)
                 and key
-                and key[0] in ("padbuf", "process", "squeeze")
+                and key[0] in ("padbuf", "process", "squeeze", "fforward")
             )
             return hit(key, by_value)
 
@@ -1397,6 +1425,7 @@ class JaxEngine:
             if getattr(self, kind) < getattr(self, wide):
                 double(kind)
             self._delta_fallback = True
+            self._fallback_since = None  # restart the narrow-probe clock
         elif kind == "pair":
             double("pair_cap")
         elif kind == "route" and self.route_cap is not None:
@@ -1482,16 +1511,27 @@ class JaxEngine:
         for f, v in snap.items():
             setattr(state, f, v)
 
-    def _maybe_reset_fallback(self) -> None:
-        """Sticky wide-buffer fallback with a periodic narrow probe: every
-        4th operation under fallback tries the narrow delta buffers again
-        (one rollback if the workload is still store-scale, a return to
-        delta-scale costs if it is not)."""
+    def _maybe_reset_fallback(self, state: EngineState) -> None:
+        """Sticky wide-buffer fallback with a periodic narrow probe.
+
+        Once ``state.update_epoch`` has advanced 4 epoch barriers past the
+        epoch at which fallback was entered (or last re-asserted by a delta
+        overflow), the next operation tries the narrow delta buffers again
+        — one rollback if the workload is still store-scale, a return to
+        delta-scale costs if load has dropped.  The schedule is keyed off
+        epoch barriers (one per committed operation) rather than any round
+        count: the fused fixpoint advances rounds on device, so a per-round
+        or per-call counter would tick at a rate that depends on how the
+        rounds are orchestrated, not on how many operations ran.
+        """
         if not self._delta_fallback:
+            self._fallback_since = None
             return
-        self._fallback_ops += 1
-        if self._fallback_ops % 4 == 0:
+        if self._fallback_since is None:
+            self._fallback_since = state.update_epoch
+        elif state.update_epoch - self._fallback_since >= 4:
             self._delta_fallback = False
+            self._fallback_since = None
 
     def _presize_delta(self, n_rows: int) -> None:
         """Pre-size the delta buffers for a KNOWN cardinality — the admitted
@@ -1508,9 +1548,14 @@ class JaxEngine:
         target width divides by the shard count — a skewed row
         distribution is the overflow retry's job, exactly as for any other
         per-shard buffer.
+
+        An EMPTY admitted batch (a no-op epoch) still selects buffers: the
+        cardinality clamps to 1 so the pow2 target is the minimum delta
+        width, never a degenerate 0-row presize that the next phase would
+        have to repair with a width-discovery restart booked against
+        ``wide_growth_restarts`` on an idle epoch.
         """
-        if n_rows <= 0:
-            return
+        n_rows = max(int(n_rows), 1)
         need = _pow2(-(-n_rows // self.n_shards))
         grew: set = set()
         for attr, wide in (
@@ -1631,6 +1676,12 @@ class JaxEngine:
         re-layout the sharded arena if the store itself grew — the shared
         retry step of :meth:`_apply_update` and the serving scheduler
         (:mod:`repro.serve.triple_store`)."""
+        # dispatches issued by the rollback/grow/restart machinery must not
+        # inherit whatever phase tag was live (or stale) when the overflow
+        # fired — attribute them to a distinct "retry" phase the static
+        # dispatch profile admits; the restarted generator re-tags its own
+        # phases from the top
+        self.dispatches.phase = "retry"
         self._restore(state, snap)
         old_cap = self.capacity
         kind = str(err)
@@ -1678,6 +1729,24 @@ class JaxEngine:
         have_cands = True
         while first or have_cands or requeued:
             first = False
+            # fused fixpoint: while the stream sits at the active delta
+            # width and no full-plan requeue is pending, run the whole
+            # inner loop as ONE compiled lax.while_loop.  Requeued rules
+            # and post-requeue WIDE streams (squeezed to out_cap) take the
+            # host-orchestrated round below — delta plans narrow the
+            # stream back within one round, and the fused loop resumes.
+            if (
+                self.fuse_rounds
+                and not requeued
+                and int(cands.shape[0]) == self._active_delta_out * self.n_shards
+            ):
+                if rounds_here >= max_rounds:
+                    raise RuntimeError("did not converge")
+                iters, cands, cand_valid, have_cands = self._fused_forward(
+                    state, cands, cand_valid, max_rounds - rounds_here
+                )
+                rounds_here += iters
+                continue
             state.r += 1
             r = state.r
             stats.rounds += 1
@@ -1768,6 +1837,151 @@ class JaxEngine:
             else:
                 have_cands = False
 
+    def _get_fused_forward_fn(self, n_cand_rows: int, plans_sig: tuple):
+        key = (
+            "fforward", n_cand_rows, plans_sig,
+            ("bind", self._active_bind), ("out", self._active_delta_out),
+            ("rewrite", self._active_rewrite), ("route", self.route_cap),
+            ("pair", self.pair_cap),
+        )
+        if key not in self._fns:
+            from .fused import fused_forward_rounds
+
+            a = self.axis
+            fn = partial(
+                fused_forward_rounds,
+                plans=plans_sig,
+                rewrite_cap=self._active_rewrite,
+                bind_cap=self._active_bind,
+                plan_out_cap=self._active_delta_out,
+                pair_cap=self.pair_cap,
+                route_cap=self.route_cap if a is not None else None,
+                axis=a,
+                n_shards=self.n_shards,
+                use_kernel=self.use_kernel,
+            )
+            d = P(a) if a else None
+            rpl = P() if a else None
+            flag_specs = {
+                "iters": rpl, "have_cands": rpl, "n_new": rpl,
+                "n_pairs": rpl,
+                "n_reflexive": d, "n_deriv": d, "n_appl": d,
+                "ov_store": rpl, "ov_rewrite": rpl, "ov_route": rpl,
+                "ov_pair": rpl, "ov_bind": rpl, "ov_out": rpl,
+                "ov_squeeze": rpl,
+                "contradiction": rpl, "consts_changed": rpl,
+            }
+            self._register_fn(key, self._wrap(
+                fn,
+                in_specs=(
+                    d, d, d, d, d, rpl, d, d, d, d,
+                    rpl, rpl, rpl, rpl, rpl, rpl,
+                ),
+                out_specs=(d, d, d, d, rpl, d, d, d, d, flag_specs),
+            ))
+        return self._fns[key]
+
+    def _fused_forward(self, state: EngineState, cands, cand_valid,
+                       rounds_left: int):
+        """Run forward rounds as one fused on-device fixpoint.
+
+        Returns ``(iters, cands, cand_valid, have_cands)``.  Healthy
+        convergence returns an empty stream; a rho-reaches-a-rule-constant
+        exit rewrites the program on the host, re-evaluates the exit
+        round's plans with the new constants (the device nullified its own
+        evaluation of that round) and hands the resulting stream back to
+        the driver loop.  Capacity overflow and contradiction raise exactly
+        what the per-round host loop would have raised — the snapshot
+        rollback upstream makes the committed post-overflow state moot.
+        """
+        from .fused import forward_plan_signature, program_tables
+
+        stats = state.stats
+        plans_sig = forward_plan_signature(state.program)
+        fn = self._get_fused_forward_fn(int(cands.shape[0]), plans_sig)
+        ac, hc, cv, cvd = program_tables(state.program)
+        (spo, epoch, marked, n_used, rep, sort_perm, sorted_keys,
+         cands, cand_valid, fl) = fn(
+            state.spo, state.epoch, state.marked, state.tomb, state.n_used,
+            state.rep, state.sort_perm, state.sorted_keys, cands, cand_valid,
+            jnp.asarray(state.r, I32), jnp.asarray(rounds_left, I32),
+            ac, hc, cv, cvd,
+        )
+        state.spo, state.epoch, state.marked, state.n_used = (
+            spo, epoch, marked, n_used,
+        )
+        state.sort_perm, state.sorted_keys = sort_perm, sorted_keys
+        state.rep = rep
+
+        def flag(name: str) -> bool:
+            return bool(np.asarray(fl[name]).reshape(-1)[0])
+
+        iters = int(np.asarray(fl["iters"]).reshape(-1)[0])
+        state.r += iters
+        stats.rounds += iters
+        stats.sameas_pairs += int(np.asarray(fl["n_pairs"]).reshape(-1)[0])
+        n_refl = int(np.asarray(fl["n_reflexive"]).sum())
+        stats.reflexive_added += n_refl
+        stats.derivations += n_refl + int(np.asarray(fl["n_deriv"]).sum())
+        stats.rule_applications += int(np.asarray(fl["n_appl"]).sum())
+
+        for kind in ("store", "rewrite", "route", "pair"):
+            if flag("ov_" + kind):
+                raise CapacityError(
+                    self._active_rewrite_kind if kind == "rewrite" else kind
+                )
+        if flag("contradiction"):
+            from .materialise import Contradiction
+
+            raise Contradiction("owl:differentFrom violation")
+        if flag("ov_bind"):
+            raise CapacityError(self._active_bind_kind)
+        if flag("ov_out") or flag("ov_squeeze"):
+            raise CapacityError(self._active_delta_kind)
+
+        if flag("consts_changed"):
+            rep_host = compress_np(np.asarray(state.rep))
+            p_new, changed_idx = state.program.rewrite(rep_host)
+            if changed_idx:
+                stats.rule_rewrites += 1
+                stats.rules_requeued += len(changed_idx)
+            state.program = p_new
+            r = state.r
+            bufs = []
+            had_full = False
+            if int(np.asarray(fl["n_new"]).reshape(-1)[0]) > 0:
+                # the exit round's fresh delta was committed on device but
+                # its window never crossed to the host — evaluate every
+                # delta plan (a sound superset of the mask-filtered set;
+                # impossible plans match zero rows and count nothing)
+                for k, rule in enumerate(state.program.rules):
+                    bufs += self._eval_rule(
+                        state, r + 1, rule, k, "delta", stats,
+                        delta_masks=None,
+                    )
+            for k in sorted(set(changed_idx)):
+                bufs += self._eval_rule(
+                    state, r + 1, state.program.rules[k], k, "full", stats
+                )
+                had_full = True
+            if bufs:
+                cands, cand_valid = self._bucket_cands(bufs)
+                target = self.out_cap if had_full else self._active_delta_out
+                kind = "out" if had_full else self._active_delta_kind
+                rows_global = target * self.n_shards
+                if int(cands.shape[0]) > rows_global:
+                    sq = self._get_squeeze_fn(int(cands.shape[0]), target)
+                    cands, cand_valid, sq_ov = sq(cands, cand_valid)
+                    if bool(np.asarray(sq_ov).any()):
+                        raise CapacityError(kind)
+                return iters, cands, cand_valid, bool(cand_valid.any())
+            return iters, cands, cand_valid, False
+
+        if flag("have_cands"):
+            # round budget exhausted with candidates still flowing
+            raise RuntimeError("did not converge")
+        return iters, cands, cand_valid, False
+
     @staticmethod
     def _atom_may_match(atom, masks: np.ndarray) -> bool:
         """False iff a constant position of ``atom`` misses the delta masks
@@ -1856,6 +2070,7 @@ class JaxEngine:
                 bind_cap=bind_cap,
                 out_cap=out_cap,
                 axis=a,
+                use_kernel=self.use_kernel,
             )
             d = P(a) if a else None
             rpl = P() if a else None
@@ -1966,7 +2181,7 @@ class JaxEngine:
         from .incremental_spmd import spmd_add_facts, spmd_delete_facts
 
         t0 = time.perf_counter()
-        self._maybe_reset_fallback()
+        self._maybe_reset_fallback(state)
         while True:
             snap = self._snapshot(state)
             try:
@@ -2069,6 +2284,7 @@ def _trace_rule_plans(engine, state, rule, k):
             fn = partial(
                 eval_plan, plan=tuple(plan), head_var_slots=head_slots,
                 bind_cap=engine.bind_cap, out_cap=engine.out_cap, axis=None,
+                use_kernel=engine.use_kernel,
             )
             jx = jax.make_jaxpr(fn)(
                 state.spo, state.epoch, state.marked, state.tomb,
@@ -2094,7 +2310,7 @@ def _audit_rplan(engine, state):
         fn = partial(
             eval_plan_rederive, plan=tuple(plan), head_var_slots=head_slots,
             seed_vars=seed_vars, bind_cap=engine.bind_cap,
-            out_cap=engine.out_cap, axis=None,
+            out_cap=engine.out_cap, axis=None, use_kernel=engine.use_kernel,
         )
         jx = jax.make_jaxpr(fn)(
             state.spo, state.epoch, state.marked, state.tomb,
@@ -2110,6 +2326,7 @@ def _audit_process(engine, state):
     fn = partial(
         process_candidates, rewrite_cap=engine.rewrite_cap, axis=None,
         n_shards=1, route_cap=None, pair_cap=engine.pair_cap,
+        use_kernel=engine.use_kernel,
     )
     cands = jnp.zeros((engine.out_cap, 3), I32)
     cv = jnp.zeros((engine.out_cap,), bool)

@@ -76,6 +76,8 @@ from .engine_jax import (
     _route_rows,
     register_auditable,
 )
+from repro.kernels import ops as kernel_ops
+
 from .terms import SAME_AS, is_var
 from .triples import dedup_rows, pack, setdiff_rows
 from .uf import clique_sizes, split_cliques
@@ -134,11 +136,18 @@ def _od_step(
     spo, epoch, marked, tomb, sorted_keys, sort_perm, rep, sizes, suspect,
     heads, hv, w,
     *, axis, n_shards, route_cap, refl_cap,
+    with_masks: bool = True, use_kernel: bool = False,
 ):
     """One overdelete wave: tag heads + reflexivity children, detect suspect
     cliques (psum'd mask — the only state that leaves the shard), and grab
     every live fact touching a fresh suspect.  Returns
     ``(tomb', suspect', n_new, overflow, frontier_masks)``.
+
+    ``with_masks=False`` skips the per-position frontier mask reduction
+    (returning all-False masks): the fused wave loop evaluates every
+    tombstone plan unconditionally, so the host-side plan filter the masks
+    feed never runs — dead-plan skipping is an orchestration optimisation,
+    not a semantic one (a skipped plan's delta atom matches zero rows).
     """
     C = spo.shape[0]
     store = (epoch >= 0) & ~marked  # the pre-deletion store (DRed's T)
@@ -165,7 +174,10 @@ def _od_step(
 
     # dedup locally before the exchange (shrinks bucket pressure)
     keys = jnp.where(sv, _pack3(stream), KEY_MAX)
-    order = jnp.argsort(keys)
+    if use_kernel:  # sort-free Pallas counting-rank dedup
+        order = kernel_ops.dedup_order(keys)
+    else:
+        order = jnp.argsort(keys)
     sk = keys[order]
     uniq = jnp.concatenate([jnp.asarray([True]), sk[1:] != sk[:-1]])
     stream, sv = stream[order], uniq & (sk < KEY_MAX)
@@ -214,14 +226,17 @@ def _od_step(
 
     # per-position resource masks of the wave's new rows: the host driver
     # skips next wave's tombstone plans whose delta atom cannot match them
-    fm = []
-    for pos in range(3):
-        fm.append(
-            jnp.zeros(rep.shape[0], bool).at[
-                jnp.where(new, spo[:, pos], 0)
-            ].max(new)
-        )
-    od_masks = _psum_bool(jnp.stack(fm), axis)
+    if with_masks:
+        fm = []
+        for pos in range(3):
+            fm.append(
+                jnp.zeros(rep.shape[0], bool).at[
+                    jnp.where(new, spo[:, pos], 0)
+                ].max(new)
+            )
+        od_masks = _psum_bool(jnp.stack(fm), axis)
+    else:
+        od_masks = jnp.zeros((3, rep.shape[0]), bool)
     return tomb, suspect, n_new[None], overflow[None], f_ov[None], od_masks
 
 
@@ -335,7 +350,50 @@ def _od_fn(engine, n_heads: int):
         out_specs=(d, rpl, rpl, d, d, rpl),
         n_shards=engine.n_shards, route_cap=route_cap,
         refl_cap=engine._active_delta_out,
+        use_kernel=engine.use_kernel,
     )
+
+
+def _fwave_fn(engine, plans_sig: tuple):
+    """Wrapped :func:`repro.core.fused.fused_delete_waves` for this engine.
+
+    Keyed like the engine's own fused-forward fn: the plan signature plus
+    every cap the trace closes over, each tagged with its buffer family so
+    post-growth eviction stays precise."""
+    key = (
+        "fwave", plans_sig,
+        ("bind", engine._active_bind), ("out", engine._active_delta_out),
+        ("route", engine.route_cap),
+    )
+    if key not in engine._fns:
+        from .fused import fused_delete_waves
+
+        a = engine.axis
+        fn = partial(
+            fused_delete_waves,
+            plans=plans_sig,
+            bind_cap=engine._active_bind,
+            plan_out_cap=engine._active_delta_out,
+            route_cap=engine.route_cap if a is not None else None,
+            refl_cap=engine._active_delta_out,
+            axis=a,
+            n_shards=engine.n_shards,
+            use_kernel=engine.use_kernel,
+        )
+        d, rpl = _specs(engine)
+        flag_specs = {
+            k: rpl
+            for k in (
+                "iters", "n_od", "n_new",
+                "ov_route", "ov_refl", "ov_bind", "ov_out", "ov_squeeze",
+            )
+        }
+        engine._register_fn(key, engine._wrap(
+            fn,
+            in_specs=(d, d, d, d, d, d, rpl, rpl, rpl, rpl, rpl, rpl),
+            out_specs=(d, rpl, flag_specs),
+        ))
+    return engine._fns[key]
 
 
 def _finalize_fn(engine):
@@ -593,31 +651,71 @@ def _delete_phases_tagged(engine, state, delta, max_rounds, tag):
 
     suspect = jnp.zeros((state.n_res,), bool)
     sizes_j = jnp.asarray(sizes, dtype=I32)
-    w = 0
-    while True:
-        w += 1
-        state.stats.od_waves += 1
-        heads, hv = _tomb_heads(engine, state, w, masks)
-        fn = _od_fn(engine, int(heads.shape[0]))
-        state.tomb, suspect, n_new, ov_route, ov_refl, od_masks = fn(
+    if engine.fuse_rounds:
+        # one compiled fixpoint over every wave: tombstone plans + od step
+        # run in a single lax.while_loop, convergence decided on device.
+        # The host's dead-plan mask filtering is dropped (impossible plans
+        # match zero rows inside the trace) — what it saved in compute it
+        # cost in per-wave dispatches, the quantity this path exists to kill.
+        from .fused import forward_plan_signature, program_tables
+
+        plans_sig = forward_plan_signature(state.program, tombstone=True)
+        fn = _fwave_fn(engine, plans_sig)
+        ac, hc, _cv, _cvd = program_tables(state.program)
+        state.tomb, suspect, fl = fn(
             state.spo, state.epoch, state.marked, state.tomb,
-            state.sorted_keys, state.sort_perm,
-            state.rep, sizes_j, suspect, heads, hv, jnp.asarray(w, I32),
+            state.sorted_keys, state.sort_perm, state.rep, sizes_j, suspect,
+            jnp.asarray(max_rounds, I32), ac, hc,
         )
-        if bool(np.asarray(ov_route).any()):
+
+        def _flag(name: str) -> bool:
+            return bool(np.asarray(fl[name]).reshape(-1)[0])
+
+        state.stats.od_waves += int(np.asarray(fl["iters"]).reshape(-1)[0])
+        if _flag("ov_route"):
             raise CapacityError("route")
-        if bool(np.asarray(ov_refl).any()):
-            # the reflexivity buffer is sized by the ACTIVE delta width —
-            # under the wide-buffer fallback that is out_cap, whose growth
-            # kind must be named or the (clamped) delta cap would stop
-            # growing and the retry loop would spin on the same overflow
+        if _flag("ov_bind"):
+            raise CapacityError(engine._active_bind_kind)
+        if _flag("ov_refl") or _flag("ov_out") or _flag("ov_squeeze"):
+            # the reflexivity buffer and the plan-output stream are both
+            # sized by the ACTIVE delta width — under the wide-buffer
+            # fallback that is out_cap, whose growth kind must be named or
+            # the (clamped) delta cap would stop growing and the retry loop
+            # would spin on the same overflow
             raise CapacityError(engine._active_delta_kind)
-        n_wave = int(np.asarray(n_new).reshape(-1)[0])
-        if n_wave == 0:
-            break
-        n_od_host += n_wave
-        masks = np.asarray(od_masks)
-        yield "wave"
+        if int(np.asarray(fl["n_new"]).reshape(-1)[0]) > 0:
+            raise RuntimeError("did not converge")
+        n_wave_total = int(np.asarray(fl["n_od"]).reshape(-1)[0])
+        n_od_host += n_wave_total
+        if n_wave_total:
+            yield "wave"
+    else:
+        w = 0
+        while True:
+            w += 1
+            state.stats.od_waves += 1
+            heads, hv = _tomb_heads(engine, state, w, masks)
+            fn = _od_fn(engine, int(heads.shape[0]))
+            state.tomb, suspect, n_new, ov_route, ov_refl, od_masks = fn(
+                state.spo, state.epoch, state.marked, state.tomb,
+                state.sorted_keys, state.sort_perm,
+                state.rep, sizes_j, suspect, heads, hv, jnp.asarray(w, I32),
+            )
+            if bool(np.asarray(ov_route).any()):
+                raise CapacityError("route")
+            if bool(np.asarray(ov_refl).any()):
+                # the reflexivity buffer is sized by the ACTIVE delta width —
+                # under the wide-buffer fallback that is out_cap, whose
+                # growth kind must be named or the (clamped) delta cap would
+                # stop growing and the retry loop would spin on the same
+                # overflow
+                raise CapacityError(engine._active_delta_kind)
+            n_wave = int(np.asarray(n_new).reshape(-1)[0])
+            if n_wave == 0:
+                break
+            n_od_host += n_wave
+            masks = np.asarray(od_masks)
+            yield "wave"
 
     tag.phase = "delete:finalize"
     # pre-size the delta buffers from the now-known overdelete cardinality:
@@ -760,20 +858,33 @@ def static_dispatch_profile(program=None) -> dict:
         sum(len(r.body) for r in program.rules) if program is not None else None
     )
     n_rules = len(program.rules) if program is not None else None
-    # the shared forward round: one process step, the delta plans, and at
-    # most one squeeze of the bucketed candidate stream
-    forward = {"process": 1, "plan": n_plans, "squeeze": 1}
+    # the shared forward round.  Fused engines (fuse_rounds=True, the
+    # default) dispatch ONE ``fforward`` fixpoint per convergence stretch;
+    # host-loop engines (and the wide/requeued rounds the fused branch
+    # hands back to the host body) dispatch one process step, the delta
+    # plans, and at most one squeeze PER ROUND.
+    forward = {"fforward": 1, "process": 1, "plan": n_plans, "squeeze": 1}
     return {
         "add:prepare": {"rebuild_index": 1},          # only if index dirty
-        "add:forward": dict(forward),                 # per round
+        "add:forward": dict(forward),
         "delete:prepare": {"rebuild_index": 1},       # only if index dirty
         "delete:seed": {"seed_tombs": 1},             # per query chunk
-        "delete:wave": {"plan": n_plans, "squeeze": 1, "od": 1},  # per wave
+        # fused: one ``fwave`` fixpoint for ALL waves; host loop: the
+        # tombstone plans + squeeze + od step per wave
+        "delete:wave": {
+            "fwave": 1, "plan": n_plans, "squeeze": 1, "od": 1,
+        },
         "delete:finalize": {"extract_od": 1, "finalize_tombs": 1},
         # per matching rule, plus the seed membership/occupancy probes that
         # assemble the forward seeds (member: per query chunk)
         "delete:rederive": {"rplan": n_rules, "member": 1, "occupancy": 1},
         "delete:forward": dict(forward),
+        # the capacity-retry machinery (rollback, growth, arena re-layout)
+        # tags its own dispatches "retry" so restart costs never masquerade
+        # as phase work; the restarted generator re-tags from the top, so
+        # only the recovery step itself (at most an index rebuild after a
+        # re-layout) may dispatch here
+        "retry": {"rebuild_index": 1},
     }
 
 
@@ -848,3 +959,10 @@ def _audit_occupancy(engine, state):
     fn = partial(_occupancy, axis=None)
     jx = jax.make_jaxpr(fn)(state.spo, state.epoch, state.marked, state.rep)
     yield "occupancy", jx
+
+
+# imported for its registration side effect: the fused fixpoint fns join
+# the audit inventory (``fforward`` / ``fwave``) whenever the incremental
+# machinery is loaded.  Must sit at module END — fused.py lazily imports
+# ``_od_step`` back from this module inside its wave body.
+from . import fused  # noqa: E402, F401

@@ -239,4 +239,17 @@ PROFILES: dict[str, dict] = {
         n_groups=40, group_size=3, n_spokes_per=2, n_plain=3000,
         hierarchy_depth=2, hometown_groups=4, hometown_size=24,
     ),
+    # Round-count extremes for the fused-fixpoint dispatch gate
+    # (BENCH_incremental's dispatches_per_event).  Chain: almost no
+    # merges, deep hierarchy + chain rules => long multi-round forward
+    # convergence per event.  Clique: merge-dense, shallow payload =>
+    # rounds dominated by the sameAs machinery and overdelete waves.
+    "chain_like": dict(
+        n_groups=2, group_size=3, n_spokes_per=1, n_plain=6000,
+        hierarchy_depth=5, chain_rules=True,
+    ),
+    "clique_like": dict(
+        n_groups=400, group_size=6, n_spokes_per=2, n_plain=1000,
+        hierarchy_depth=1,
+    ),
 }

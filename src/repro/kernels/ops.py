@@ -14,6 +14,7 @@ from .bsearch import (
     prefix_range_bounds as _prefix_range_bounds,
     search_bounds as _search_bounds,
 )
+from .dedup import dedup_order as _dedup_order
 from .embedding_bag import embedding_bag as _embedding_bag
 from .flash_attention import flash_attention_bhsd as _flash_attention_bhsd
 from .fm_interact import fm_interact as _fm_interact
@@ -42,6 +43,11 @@ def search_bounds(queries, keys, **kw):
 def prefix_range_bounds(prefix_cols, keys, **kw):
     kw.setdefault("interpret", INTERPRET)
     return _prefix_range_bounds(prefix_cols, keys, **kw)
+
+
+def dedup_order(keys, **kw):
+    kw.setdefault("interpret", INTERPRET)
+    return _dedup_order(keys, **kw)
 
 
 def embedding_bag(ids, table, **kw):

@@ -43,6 +43,15 @@ def prefix_range_bounds_ref(prefix_cols, keys):
     return start.astype(np.int32), end.astype(np.int32)
 
 
+def dedup_order_ref(keys):
+    # numpy (not jnp): int64 packed keys must survive without the x64 flag
+    import numpy as np
+
+    return np.argsort(np.asarray(keys, np.int64), kind="stable").astype(
+        np.int32
+    )
+
+
 def embedding_bag_ref(ids: jnp.ndarray, table: jnp.ndarray) -> jnp.ndarray:
     return table[ids].sum(axis=1)
 

@@ -297,7 +297,7 @@ class TripleStore:
         self._inflight = t
         t.status = "running"
         self._t_start = time.perf_counter()
-        self.engine._maybe_reset_fallback()
+        self.engine._maybe_reset_fallback(self.state)
         self._snap = self.engine._snapshot(self.state)
         self._gen = self._make_gen(t)
         self.inflight_phase = "admitted"

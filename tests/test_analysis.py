@@ -151,6 +151,7 @@ def test_inventory_lints_clean(dataset):
     assert fams >= {
         "process", "squeeze", "rebuild_index", "seed_tombs",
         "od", "finalize_tombs", "extract_od", "member", "occupancy",
+        "fforward", "fwave",
     }, fams
     if program.rules:  # pure-sameAs profiles have no rule plans to trace
         assert {"plan", "rplan"} <= fams, fams
@@ -185,6 +186,8 @@ def test_dispatch_crosscheck_flags_unknowns():
     c.record("process")          # unknown phase
     c.phase = "delete:wave"
     c.record("rogue")            # unregistered family in a known phase
+    c.phase = "retry"
+    c.record("rebuild_index")    # capacity-retry recovery: admitted
     c.phase = None
     c.record("anything")         # untagged: never checked
     probs = dispatch_crosscheck(c)

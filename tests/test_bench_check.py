@@ -161,3 +161,55 @@ def test_compare_incremental_gates_dispatches():
             [{"dataset": "a", "speedup_engine_vs_scratch": 1.0,
               "dispatches_per_event": d}], baseline,
         ) == [], d
+
+
+def test_compare_incremental_absolute_dispatch_ceiling():
+    """The ceiling axis is baseline-INdependent: a profile over its absolute
+    dispatches_per_event bound fails even when the committed baseline is
+    equally bad (regenerating a baseline on a regressed build must not
+    ratify the regression), and profiles without a ceiling are skipped."""
+    baseline = {"rows": [
+        {"dataset": "a", "speedup_engine_vs_scratch": 1.0,
+         "dispatches_per_event": 50.0},  # baseline itself already blown
+    ]}
+    fresh = [
+        {"dataset": "a", "speedup_engine_vs_scratch": 1.0,
+         "dispatches_per_event": 49.0},  # under baseline, over ceiling
+        {"dataset": "unlisted", "speedup_engine_vs_scratch": 1.0,
+         "dispatches_per_event": 999.0},  # no ceiling: skipped
+    ]
+    problems = compare_incremental(
+        fresh, baseline, tolerance=0.2, dispatch_ceilings={"a": 20.0}
+    )
+    assert len(problems) == 1, problems
+    assert problems[0].startswith("a:") and "absolute ceiling" in problems[0]
+    # at or under the ceiling passes; null fresh column is skipped; no
+    # ceilings dict at all leaves the relative gate's behaviour unchanged
+    for d in (20.0, 12.0, None):
+        assert compare_incremental(
+            [{"dataset": "a", "speedup_engine_vs_scratch": 1.0,
+              "dispatches_per_event": d}],
+            baseline, dispatch_ceilings={"a": 20.0},
+        ) == [], d
+    assert compare_incremental(fresh, baseline) == []
+
+
+def test_shipped_dispatch_ceilings_cover_all_profiles():
+    """Every generator profile the bench runs has a shipped ceiling, and the
+    committed baseline itself sits under it — the gate is live, not
+    aspirational."""
+    import json
+    import os
+
+    from benchmarks.run import BASELINE, DISPATCH_CEILINGS
+    from repro.data.generator import PROFILES
+
+    assert set(DISPATCH_CEILINGS) >= set(PROFILES), (
+        set(PROFILES) - set(DISPATCH_CEILINGS)
+    )
+    if os.path.exists(BASELINE):
+        with open(BASELINE) as fh:
+            rows = json.load(fh).get("rows", [])
+        assert compare_incremental(
+            rows, {"rows": []}, dispatch_ceilings=DISPATCH_CEILINGS
+        ) == []

@@ -409,17 +409,19 @@ _MESH_SCRIPT = textwrap.dedent(
     events = sample_update_stream(facts, dic, n_events=4, batch=8, seed=3)
 
     finals = {}
-    cells = [("m1", make_engine_mesh(1), None, "targeted"),
-             ("m2", make_engine_mesh(2), None, "targeted"),
-             ("m4", make_engine_mesh(4), None, "targeted"),
-             ("m4_routed", make_engine_mesh(4), 256, "targeted"),
-             ("m2_requeue", make_engine_mesh(2), None, "requeue")]
-    for name, mesh, route_cap, rmode in cells:
+    cells = [("m1", make_engine_mesh(1), None, "targeted", True),
+             ("m2", make_engine_mesh(2), None, "targeted", True),
+             ("m4", make_engine_mesh(4), None, "targeted", True),
+             ("m4_routed", make_engine_mesh(4), 256, "targeted", True),
+             ("m2_requeue", make_engine_mesh(2), None, "requeue", True),
+             ("m2_nofuse", make_engine_mesh(2), None, "targeted", False),
+             ("m4_routed_nofuse", make_engine_mesh(4), 256, "targeted", False)]
+    for name, mesh, route_cap, rmode, fuse in cells:
         assert mesh_size(mesh) in (1, 2, 4)
         eng = JaxEngine(dic.n_resources, capacity=1 << 10, bind_cap=1 << 10,
                         out_cap=1 << 10, rewrite_cap=1 << 10, mesh=mesh,
                         route_cap=route_cap, seed_chunk=128,
-                        rederive_mode=rmode)
+                        rederive_mode=rmode, fuse_rounds=fuse)
         state = eng.materialise_state(facts, prog)
         explicit = facts
         for op, delta in events:

@@ -70,6 +70,32 @@ def test_prefix_range_bounds_sweep(nq, nk, k):
         assert ((rows >> shift) == packed_pref[i]).all()
 
 
+@pytest.mark.parametrize(
+    "n,block,tile", [(7, 128, 128), (128, 128, 128), (513, 128, 256), (1000, 64, 128)]
+)
+@pytest.mark.parametrize("dup", [0.0, 0.5, 1.0])
+def test_dedup_order_sweep(n, block, tile, dup):
+    """Stable rank permutation == jnp.argsort(stable) over packed keys with
+    duplicates and KEY_MAX padding slots (the delta-stream dedup shape).
+
+    Unlike the other int64 kernels, dedup_order is called INSIDE traced
+    engine code (the fused round loop), so it takes traced int64 keys under
+    the engine's x64 scope — the test mirrors that calling convention."""
+    from repro.core.engine_jax import enable_x64
+
+    keys = RNG.integers(0, 1 << 62, n).astype(np.int64)
+    n_dup = int(n * dup)
+    if n_dup:
+        keys[RNG.integers(0, n, n_dup)] = RNG.choice(keys, n_dup)
+    keys[-max(n // 8, 1):] = (1 << 63) - 1  # invalid-slot sentinels
+    with enable_x64():
+        order = ops.dedup_order(jnp.asarray(keys), block=block, tile=tile)
+        # ranking ties by position IS argsort stability
+        want = jnp.argsort(jnp.asarray(keys), stable=True)
+        np.testing.assert_array_equal(order, np.asarray(want, np.int32))
+    np.testing.assert_array_equal(order, ref.dedup_order_ref(keys))
+
+
 @pytest.mark.parametrize("b,f,v,k", [(4, 3, 50, 8), (130, 39, 1000, 10), (64, 26, 513, 16)])
 @pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
 def test_embedding_bag_sweep(b, f, v, k, dtype):
