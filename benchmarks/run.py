@@ -20,9 +20,12 @@ baseline — ``speedup_engine_vs_scratch`` (machine-normalised) by more than
 is still gated against per-event blow-ups) by more than the wider
 ``max(3 * tolerance, 0.6)``, or ``dispatches_per_event`` (the compiled-call
 dispatch floor, machine-INdependent — ROADMAP's fused-fixpoint metric) by
-more than ``tolerance``.  The gate also reruns the jaxpr trace audit
-(``repro.analysis``) and fails on any invariant violation or dispatch
-cross-check problem.
+more than ``tolerance``.  Two baseline-independent axes ride along: the
+absolute ``DISPATCH_CEILINGS`` and ``full_plan_evals == 0`` on every
+profile's maintenance-stream counters (no unconstrained whole-rule
+evaluations — exact, deterministic).  The gate also reruns the jaxpr trace
+audit (``repro.analysis``) and fails on any invariant violation or
+dispatch cross-check problem.
 """
 
 from __future__ import annotations
@@ -53,6 +56,9 @@ DISPATCH_CEILINGS: dict[str, float] = {
     "uobm_like": 15.0,      # fused steady 7.0
     "chain_like": 12.0,     # fused steady 6.0 (unfused: 24.0)
     "clique_like": 11.0,    # fused steady 5.5 (unfused: 21.8)
+    "merge_like": 40.0,     # fused steady 19.8 — merge-heavy streams pay
+                            # one mplan dispatch per rewritten rule per
+                            # event on top of the ordinary round budget
 }
 
 
@@ -92,6 +98,17 @@ def compare_incremental(
     exceeds its ceiling fails even if the committed baseline is equally
     bad — the relative gate only sees drift, the ceiling pins the level
     (see ``DISPATCH_CEILINGS``).  Profiles without a ceiling are skipped.
+
+    A second baseline-independent axis enforces ``full_plan_evals == 0``
+    on every row's ``engine_counters`` (and on the committed baseline's
+    rows, so a regenerated JSON cannot ratify a regression): maintenance
+    must never fall back to an unconstrained whole-rule evaluation —
+    deletes rederive head-bound (rplan), rho re-merges evaluate
+    merge-anchored (mplan).  The counter is deterministic, so the
+    tolerance is exact zero; a row that carries ``engine_counters`` but
+    *not* this counter fails too (a silently dropped counter must not
+    read as a pass).  Rows without ``engine_counters`` at all — the
+    minimal synthetic rows of the gate's own unit tests — are skipped.
 
     Datasets missing from either side, or null on the baseline side, are
     skipped per-metric.  Pure so the tier-1 bench smoke can pin the gate's
@@ -138,6 +155,19 @@ def compare_incremental(
                 f"{r['dataset']}: dispatches_per_event {got_d} > absolute "
                 f"ceiling {ceil}"
             )
+    for origin, rs in (("run", rows), ("baseline", baseline_doc.get("rows", []))):
+        for r in rs:
+            counters = r.get("engine_counters")
+            if counters is None:
+                continue
+            fpe = counters.get("full_plan_evals")
+            if fpe != 0:
+                problems.append(
+                    f"{r['dataset']}: {origin} full_plan_evals "
+                    f"{'missing' if fpe is None else fpe} != 0 "
+                    "(unconstrained whole-rule evaluation on a maintenance "
+                    "path)"
+                )
     return problems
 
 

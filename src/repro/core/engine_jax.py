@@ -626,6 +626,85 @@ def eval_plan_rederive(
     return out, out_valid, n_deriv[None], overflow[None], ov_out[None]
 
 
+def classify_remerge(rule_old: Rule, rule_new: Rule):
+    """How to re-evaluate one rule whose constants a rho re-merge rewrote.
+
+    Returns ``("skip", None)``, ``("anchor", j)`` or ``("full", None)``:
+
+    * ``"skip"`` — only the head changed.  The body is unchanged, so the
+      match set is exactly the one already enumerated under the old
+      spelling, and the sweep re-normalises the stored head instances under
+      the new rho; nothing needs evaluating.
+    * ``("anchor", j)`` — body atom ``j`` changed and has at least one
+      variable: evaluate the single merge-targeted plan of
+      :func:`build_merge_plan` anchored there.  Among changed variable
+      atoms the anchor is the one sharing the most variables with the rest
+      of the body (ties to the earliest atom), so the chained joins stay
+      bound-first.
+    * ``"full"`` — every changed body atom is variable-free.  A ground
+      anchor contributes no binding columns, so the remaining atoms would
+      chain as unconstrained cross-products at delta widths — strictly
+      worse than the wide-buffer full plan.  Whole-rule requeue.
+    """
+    changed = [
+        j for j, (a, b) in enumerate(zip(rule_old.body, rule_new.body))
+        if a != b
+    ]
+    if not changed:
+        return "skip", None
+    scored = []
+    for j in changed:
+        vs = {t for t in rule_new.body[j] if is_var(t)}
+        if not vs:
+            continue
+        rest = {
+            t for i, atom in enumerate(rule_new.body) if i != j
+            for t in atom if is_var(t)
+        }
+        scored.append((len(vs & rest), -j))
+    if not scored:
+        return "full", None
+    _, neg_j = max(scored)
+    return "anchor", -neg_j
+
+
+def build_merge_plan(rule: Rule, anchor: int) -> list[_AtomSpec]:
+    """The single merge-targeted plan of a rule a rho re-merge rewrote.
+
+    A re-merge creates new matches in two disjoint ways: matches using at
+    least one row of the merge round's fresh delta (the sweep re-inserts
+    every rewritten spelling as a fresh row, so the ordinary delta plans of
+    the rewritten program cover those), and matches whose rows are ALL
+    pre-merge.  An all-old match that is new must place an old row at a
+    *changed* atom — under the old spelling that row could not have
+    matched — so scanning one changed atom (the anchor) against the
+    pre-merge store (``PRED_OLD``) and chaining the remaining atoms through
+    the live store (``PRED_ALL``) enumerates a superset of the new all-old
+    matches.  The anchor's rewritten constant keeps that scan narrow (rows
+    touching the merged representative), which is the point: the whole-rule
+    full plan this replaces opens with an unconstrained store-wide scan.
+
+    Remaining atoms are ordered greedily bound-first (exactly like
+    :func:`build_rederive_plan`) so bound positions form packed-key
+    prefixes for the persistent sorted index.
+    """
+    const_mask, eq_pairs, b, f = _atom_static(rule.body[anchor], set())
+    specs = [_AtomSpec(anchor, const_mask, eq_pairs, b, f, PRED_OLD, True)]
+    bound = {v for v, _ in b} | {v for v, _ in f}
+    remaining = [j for j in range(len(rule.body)) if j != anchor]
+    while remaining:
+        j = next(
+            (i for i in remaining
+             if any(is_var(t) and t in bound for t in rule.body[i])),
+            remaining[0],
+        )
+        remaining.remove(j)
+        const_mask, eq_pairs, b, f = _atom_static(rule.body[j], bound)
+        specs.append(_AtomSpec(j, const_mask, eq_pairs, b, f, PRED_ALL))
+        bound |= {v for v, _ in b} | {v for v, _ in f}
+    return specs
+
+
 def process_candidates(
     spo,
     epoch,
@@ -643,6 +722,7 @@ def process_candidates(
     route_cap: int | None = None,
     pair_cap: int = 4096,
     use_kernel: bool = False,
+    delta_window: int = 4096,
 ):
     """Normalise, merge equalities, sweep, insert — the state-update half of a
     round (Algorithms 3-6 in bulk).  Pure; runs per-shard under shard_map.
@@ -847,7 +927,7 @@ def process_candidates(
     # per-round device-to-host transfer never scales with a wide padded
     # stream; on overflow (n_new exceeds the window) the host falls back
     # to all-True masks, which skip nothing and stay sound.
-    d_window = min(sk.shape[0], 4096)
+    d_window = min(sk.shape[0], delta_window)
     delta_rows = jnp.stack(
         [dcols["s"][:d_window], dcols["p"][:d_window], dcols["o"][:d_window]],
         axis=1,
@@ -1086,6 +1166,7 @@ class JaxEngine:
         use_kernel: bool = False,
         rederive_mode: str = "targeted",
         fuse_rounds: bool = True,
+        delta_window: int = 4096,
     ) -> None:
         self.n_resources = n_resources
         self.capacity = capacity
@@ -1097,6 +1178,12 @@ class JaxEngine:
         # grows independently so a pair burst cannot masquerade as a route
         # overflow (which would retry without ever converging)
         self.pair_cap = min(out_cap, 4096)
+        # bounded per-round device-to-host window for the fresh delta's
+        # resource masks (process_candidates flags); rounds whose fresh-row
+        # count exceeds it fall back to all-True masks — sound but
+        # unfiltered, counted in ``stats.delta_mask_fallbacks``.  Tunable
+        # mainly so tests can force the fallback path at toy scale.
+        self.delta_window = delta_window
         self.seed_chunk = seed_chunk
         # delta/tomb plans of incremental updates emit into much smaller
         # buffers than full-evaluation plans — the candidate stream (and its
@@ -1130,6 +1217,10 @@ class JaxEngine:
         # anomalous giant update cannot degrade a delta-scale stream
         # permanently.
         self._delta_fallback = False
+        # whether the engine is inside a maintenance operation (add/delete)
+        # as opposed to a base materialisation; kept in sync by
+        # :meth:`_set_update_buffers` and gates merge-targeted requeue
+        self._updating = False
         # update_epoch at which fallback mode was (last) entered/probed —
         # the narrow re-probe schedule is keyed off epoch barriers, which
         # advance once per operation whether the rounds run host-looped or
@@ -1251,7 +1342,7 @@ class JaxEngine:
         key = (
             "process", n_cand_rows, ("rewrite", self._active_rewrite),
             ("route", self.route_cap), ("out", self.out_cap),
-            ("pair", self.pair_cap),
+            ("pair", self.pair_cap), ("dwin", self.delta_window),
         )
         if key not in self._fns:
             a = self.axis
@@ -1263,6 +1354,7 @@ class JaxEngine:
                 route_cap=self.route_cap if a is not None else None,
                 pair_cap=self.pair_cap,
                 use_kernel=self.use_kernel,
+                delta_window=self.delta_window,
             )
             d = P(a) if a else None
             rpl = P() if a else None
@@ -1339,6 +1431,7 @@ class JaxEngine:
         the label cannot be recovered from the value.
         """
         narrow = updating and not self._delta_fallback
+        self._updating = updating
         self._active_delta_out = self.delta_out if narrow else self.out_cap
         self._active_delta_kind = "delta_out" if narrow else "out"
         self._active_bind = self.delta_bind if narrow else self.bind_cap
@@ -1703,6 +1796,92 @@ class JaxEngine:
         state.update_epoch += 1
         self._refresh_stats(state)
 
+    def _rewrite_program(self, state: EngineState, stats):
+        """Rewrite the program under the compressed current rho and classify
+        each changed rule for re-evaluation.
+
+        The ONE booking site for ``rule_rewrites``/``rules_requeued`` —
+        both the host round loop and the fused rewrite-due exit go through
+        here, so a single rho change can never be double-booked no matter
+        which loop detected it (the fused exit round is re-run by the host,
+        which used to hold its own copy of this block).
+
+        Returns ``(merge_q, full_q)``: ``merge_q`` is ``[(rule_idx,
+        anchor_atom), ...]`` for merge-targeted evaluation
+        (:meth:`_eval_rule_merge`), ``full_q`` the rules that keep the
+        whole-rule full-plan requeue — every changed rule when
+        ``rederive_mode="requeue"`` (the differential baseline), else only
+        the variable-free-anchor corner cases (``remerge_full_fallback``).
+        """
+        rep_host = compress_np(np.asarray(state.rep))
+        p_old = state.program
+        p_new, changed_idx = p_old.rewrite(rep_host)
+        merge_q: list[tuple[int, int]] = []
+        full_q: list[int] = []
+        if changed_idx:
+            stats.rule_rewrites += 1
+            stats.rules_requeued += len(changed_idx)
+            # targeting applies to MAINTENANCE operations (like the delete
+            # side's rederive): the base fixpoint keeps the whole-rule
+            # requeue so its derivation/application counters stay exactly
+            # the paper's Table 2 semantics (parity with the numpy oracle)
+            targeted = self._updating and self.rederive_mode == "targeted"
+            for k in changed_idx:
+                if not targeted:
+                    full_q.append(k)
+                    continue
+                how, anchor = classify_remerge(p_old.rules[k], p_new.rules[k])
+                if how == "anchor":
+                    merge_q.append((k, anchor))
+                elif how == "full":
+                    full_q.append(k)
+                    stats.remerge_full_fallback += 1
+                # "skip": head-only change — the sweep re-normalises the
+                # stored head instances, no evaluation needed
+        state.program = p_new
+        return merge_q, full_q
+
+    def _eval_rule_merge(
+        self, state: EngineState, r, rule: Rule, k: int, anchor: int, stats
+    ):
+        """Merge-targeted evaluation of one rewritten rule — the
+        forward-side analogue of the delete side's head-bound rederivation
+        (:meth:`_eval_rule_rederive`): one plan anchored at the changed
+        body atom against the pre-merge store, remaining atoms chained
+        through the live store via the persistent index.  Runs at the
+        narrow active delta buffers — the join width scales with the
+        merged cliques' footprint, never the arena.
+        """
+        atom_consts = np.zeros((len(rule.body), 3), np.int32)
+        for j, atom in enumerate(rule.body):
+            for pos, t in enumerate(atom):
+                atom_consts[j, pos] = 0 if is_var(t) else t
+        head_consts = np.asarray(
+            [0 if is_var(t) else t for t in rule.head], np.int32
+        )
+        head_slots = tuple(t if is_var(t) else None for t in rule.head)
+        plan_t = tuple(build_merge_plan(rule, anchor))
+        bind_cap, out_cap = self._active_bind, self._active_delta_out
+        fn = self._get_plan_fn(
+            ("mplan", k, anchor, plan_t, head_slots,
+             ("bind", bind_cap), ("out", out_cap)),
+            plan_t, head_slots, bind_cap, out_cap,
+        )
+        heads, valid, n_d, n_a, ov_bind, ov_out = fn(
+            state.spo, state.epoch, state.marked, state.tomb,
+            state.sorted_keys, state.sort_perm,
+            jnp.asarray(r, I32),
+            jnp.asarray(atom_consts), jnp.asarray(head_consts),
+        )
+        if bool(np.asarray(ov_bind).any()):
+            raise CapacityError(self._active_bind_kind)
+        if bool(np.asarray(ov_out).any()):
+            raise CapacityError(self._active_delta_kind)
+        stats.derivations += int(np.asarray(n_d).sum())
+        stats.rule_applications += int(np.asarray(n_a).sum())
+        stats.remerge_targeted += 1
+        return [(heads, valid)]
+
     # -- driver --------------------------------------------------------------
     def _forward(
         self,
@@ -1778,15 +1957,12 @@ class JaxEngine:
             stats.derivations += n_refl
 
             rep_changed = bool(np.asarray(flags["rep_changed"]).reshape(-1)[0])
-            if rep_changed:
-                rep_host = compress_np(np.asarray(rep_new))
-                p_new, changed_idx = state.program.rewrite(rep_host)
-                if changed_idx:
-                    stats.rule_rewrites += 1
-                    stats.rules_requeued += len(changed_idx)
-                    requeued.extend(changed_idx)
-                state.program = p_new
             state.rep = rep_new
+            merge_q: list[tuple[int, int]] = []
+            if rep_changed:
+                mq, full_q = self._rewrite_program(state, stats)
+                merge_q.extend(mq)
+                requeued.extend(full_q)
 
             # evaluate plans for the new delta, skipping plans whose delta
             # atom is incompatible with the fresh rows' resource masks
@@ -1803,6 +1979,7 @@ class JaxEngine:
                 d_rows = np.asarray(flags["delta_rows"])
                 d_rows = d_rows[np.asarray(flags["delta_valid"])]
                 if d_rows.shape[0] < n_new:
+                    stats.delta_mask_fallbacks += 1
                     delta_masks = np.ones((3, state.n_res), dtype=bool)
                 else:
                     delta_masks = np.zeros((3, state.n_res), dtype=bool)
@@ -1813,6 +1990,10 @@ class JaxEngine:
                         state, r + 1, rule, k, "delta", stats,
                         delta_masks=delta_masks,
                     )
+            for k, anchor in merge_q:
+                bufs += self._eval_rule_merge(
+                    state, r + 1, state.program.rules[k], k, anchor, stats
+                )
             for k in sorted(set(requeued)):
                 bufs += self._eval_rule(
                     state, r + 1, state.program.rules[k], k, "full", stats
@@ -1940,12 +2121,7 @@ class JaxEngine:
             raise CapacityError(self._active_delta_kind)
 
         if flag("consts_changed"):
-            rep_host = compress_np(np.asarray(state.rep))
-            p_new, changed_idx = state.program.rewrite(rep_host)
-            if changed_idx:
-                stats.rule_rewrites += 1
-                stats.rules_requeued += len(changed_idx)
-            state.program = p_new
+            merge_q, full_q = self._rewrite_program(state, stats)
             r = state.r
             bufs = []
             had_full = False
@@ -1959,7 +2135,11 @@ class JaxEngine:
                         state, r + 1, rule, k, "delta", stats,
                         delta_masks=None,
                     )
-            for k in sorted(set(changed_idx)):
+            for k, anchor in merge_q:
+                bufs += self._eval_rule_merge(
+                    state, r + 1, state.program.rules[k], k, anchor, stats
+                )
+            for k in sorted(set(full_q)):
                 bufs += self._eval_rule(
                     state, r + 1, state.program.rules[k], k, "full", stats
                 )
@@ -2319,6 +2499,30 @@ def _audit_rplan(engine, state):
             jnp.zeros((64, len(seed_vars)), I32), jnp.zeros((64,), bool),
         )
         yield f"rplan:rule{k}", jx
+
+
+@register_auditable("mplan")
+def _audit_mplan(engine, state):
+    # one trace per (rule, anchor) the forward-side targeted re-merge can
+    # dispatch: any body atom with a variable can be the changed anchor
+    # (ground anchors fall back to the whole-rule "plan" full mode)
+    for k, rule in enumerate(state.program.rules):
+        head_slots = tuple(t if is_var(t) else None for t in rule.head)
+        for anchor in range(len(rule.body)):
+            if not any(is_var(t) for t in rule.body[anchor]):
+                continue
+            plan = build_merge_plan(rule, anchor)
+            fn = partial(
+                eval_plan, plan=tuple(plan), head_var_slots=head_slots,
+                bind_cap=engine.bind_cap, out_cap=engine.out_cap, axis=None,
+                use_kernel=engine.use_kernel,
+            )
+            jx = jax.make_jaxpr(fn)(
+                state.spo, state.epoch, state.marked, state.tomb,
+                state.sorted_keys, state.sort_perm, jnp.asarray(1, I32),
+                jnp.zeros((len(rule.body), 3), I32), jnp.zeros((3,), I32),
+            )
+            yield f"mplan:rule{k}:anchor{anchor}", jx
 
 
 @register_auditable("process")

@@ -862,8 +862,15 @@ def static_dispatch_profile(program=None) -> dict:
     # default) dispatch ONE ``fforward`` fixpoint per convergence stretch;
     # host-loop engines (and the wide/requeued rounds the fused branch
     # hands back to the host body) dispatch one process step, the delta
-    # plans, and at most one squeeze PER ROUND.
-    forward = {"fforward": 1, "process": 1, "plan": n_plans, "squeeze": 1}
+    # plans, and at most one squeeze PER ROUND.  Rounds whose rho merge
+    # rewrote rule constants additionally dispatch one merge-targeted
+    # ``mplan`` per changed rule (the forward-side analogue of ``rplan``;
+    # the "plan" full-mode requeue remains only as the ground-anchor
+    # fallback and the rederive_mode="requeue" baseline).
+    forward = {
+        "fforward": 1, "process": 1, "plan": n_plans, "squeeze": 1,
+        "mplan": n_rules,
+    }
     return {
         "add:prepare": {"rebuild_index": 1},          # only if index dirty
         "add:forward": dict(forward),

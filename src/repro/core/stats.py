@@ -78,6 +78,9 @@ class MatStats:
     rederive_seed_rows: int = 0     # overdeleted head instances joined backward
     rederive_join_width: int = 0    # widest padded rederive seed table
     full_plan_evals: int = 0        # unconstrained full-plan rule evaluations
+    remerge_targeted: int = 0       # forward-side rules evaluated merge-anchored
+    remerge_full_fallback: int = 0  # forward-side whole-rule requeues (ground atoms)
+    delta_mask_fallbacks: int = 0   # delta windows that overflowed to all-True masks
     capacity_retries: int = 0       # mid-operation rollback+grow restarts
     wide_growth_restarts: int = 0   # retries that grew a wide (base-run) cap
     triples_total: int = 0          # arena rows used (marked + unmarked)

@@ -23,7 +23,12 @@ paper's running example.  Spoke triples hang off duplicates so that merges
 
   * symmetric+transitive :sameHomeTown (the UOBM quadratic-derivation trap),
   * a class hierarchy (type-propagation chains like Claros/OpenCyc),
-  * a property chain rule (DBpedia-style join rules).
+  * a property chain rule (DBpedia-style join rules),
+  * entity-constant rules (``const_rules``): rules whose body references a
+    specific clique member by ID, so that merging its clique rewrites the
+    rule itself — rho(P) changes, Algorithm 1's queue R fills, and the
+    forward-side re-merge machinery is exercised (the ``merge_like``
+    profile drives the ``full_plan_evals == 0`` acceptance gate with it).
 """
 
 from __future__ import annotations
@@ -46,6 +51,7 @@ def generate(
     hometown_groups: int = 0,
     hometown_size: int = 0,
     chain_rules: bool = False,
+    const_rules: int = 0,
     seed: int = 0,
 ) -> tuple[np.ndarray, Program, Dictionary]:
     """Returns (facts (N,3) int32, program, dictionary)."""
@@ -93,6 +99,20 @@ def generate(
         for j in range(n_spokes_per):
             s = dic.intern(f":spoke{g}_{j}")
             rows.append((s, spoke, members[j % group_size]))
+
+    # entity-constant rules: each references its group's LAST member (the
+    # highest-ID clique member, interned above in fact order), so rho — whose
+    # representative is the clique minimum — rewrites the rule constant on
+    # the in-group merge and again whenever an update merges the clique into
+    # a lower-ID one.  Parsed AFTER the group entities so the constant is the
+    # already-interned member, not a fresh low-ID resource that would win
+    # representative election and never be rewritten.
+    if const_rules > 0:
+        const_lines = [
+            f"(?s, :anchored, :A{k}) <- (?s, :spoke, :e{k}_{group_size - 1})"
+            for k in range(min(const_rules, n_groups))
+        ]
+        program = Program(program.rules + parse_program(const_lines, dic).rules)
 
     # plain (merge-free) payload triples
     ents = dic.intern_many([f":p{i}" for i in range(max(n_plain // 4, 1))])
@@ -251,5 +271,13 @@ PROFILES: dict[str, dict] = {
     "clique_like": dict(
         n_groups=400, group_size=6, n_spokes_per=2, n_plain=1000,
         hierarchy_depth=1,
+    ),
+    # Merge-heavy stream against entity-constant rules: update merges that
+    # relabel a referenced clique member rewrite rho(P) mid-stream, driving
+    # the forward-side targeted re-merge path (and the full_plan_evals == 0
+    # acceptance gate) rather than only the delete-side rederive machinery.
+    "merge_like": dict(
+        n_groups=48, group_size=4, n_spokes_per=3, n_plain=600,
+        hierarchy_depth=1, const_rules=12,
     ),
 }

@@ -26,14 +26,20 @@ def test_bench_smoke_row_schema():
     ops = row["per_event"]["ops"]
     assert row["n_warmup"] == len({*ops})
     assert len(row["per_event"]["engine_s"]) == 3
-    # engine-path health counters recorded per profile (ISSUE 5 satellite)
+    # engine-path health counters recorded per profile (ISSUE 5 satellite;
+    # ISSUE 8 adds the forward-side re-merge + delta-mask columns and makes
+    # them update-stream deltas net of the base materialisation)
     counters = row["engine_counters"]
     assert {
         "index_rebuilds", "capacity_retries", "wide_growth_restarts",
         "rederive_targeted", "rederive_full_fallback", "rederive_seed_rows",
-        "rederive_join_width", "full_plan_evals",
+        "rederive_join_width", "full_plan_evals", "rule_rewrites",
+        "remerge_targeted", "remerge_full_fallback", "delta_mask_fallbacks",
     } <= set(counters)
     assert all(isinstance(v, int) and v >= 0 for v in counters.values())
+    # the invariant run.py --check enforces on every profile: maintenance
+    # never falls back to an unconstrained whole-rule evaluation
+    assert counters["full_plan_evals"] == 0
     # dispatch ledger (ISSUE 6 satellite): per-event compiled-call counts,
     # steady mean over the same warm-up mask as the time columns, and the
     # per-family totals the DispatchAuditor reconciles
@@ -192,6 +198,32 @@ def test_compare_incremental_absolute_dispatch_ceiling():
             baseline, dispatch_ceilings={"a": 20.0},
         ) == [], d
     assert compare_incremental(fresh, baseline) == []
+
+
+def test_compare_incremental_full_plan_evals_axis():
+    """The full_plan_evals == 0 axis (ISSUE 8): baseline-independent and
+    exact — a maintenance stream that fell back to an unconstrained
+    whole-rule evaluation fails the gate on either side, a row carrying
+    engine_counters without the counter fails (dropped counters must not
+    read as passes), and the gate's own minimal synthetic rows — no
+    engine_counters at all — stay out of scope."""
+    clean = {"dataset": "a", "speedup_engine_vs_scratch": 1.0,
+             "engine_counters": {"full_plan_evals": 0}}
+    dirty = {"dataset": "b", "speedup_engine_vs_scratch": 1.0,
+             "engine_counters": {"full_plan_evals": 3}}
+    dropped = {"dataset": "c", "speedup_engine_vs_scratch": 1.0,
+               "engine_counters": {"rederive_targeted": 1}}
+    legacy = {"dataset": "d", "speedup_engine_vs_scratch": 1.0}
+
+    problems = compare_incremental([clean, dirty, dropped, legacy], {"rows": []})
+    assert len(problems) == 2, problems
+    assert any(p.startswith("b:") and "full_plan_evals 3" in p for p in problems)
+    assert any(p.startswith("c:") and "missing" in p for p in problems)
+    # the committed baseline is gated too: regenerating the JSON on a
+    # regressed build cannot ratify nonzero full-plan evaluations
+    problems = compare_incremental([clean], {"rows": [dirty]})
+    assert len(problems) == 1 and "baseline" in problems[0]
+    assert compare_incremental([clean], {"rows": [clean]}) == []
 
 
 def test_shipped_dispatch_ceilings_cover_all_profiles():

@@ -244,3 +244,49 @@ def test_fallback_narrow_probe_keyed_off_epochs():
     assert eng._fallback_since is None  # ...and the clock reset on exit
     ref = materialise_rew(facts, prog, dic.n_resources)
     assert _packset(eng.state_triples(state)) == _packset(ref.triples())
+
+
+# ---------------------------------------------------------------------------
+# one rho change books rule_rewrites exactly once (fused exit re-run dedupe)
+# ---------------------------------------------------------------------------
+
+def test_remerge_booked_once_across_fused_exit():
+    """A rho re-merge that rewrites a rule constant books ``rule_rewrites``
+    exactly once (and ``rules_requeued`` once per changed rule), identically
+    across the fused engine — whose rewrite-due exit round is nullified on
+    device and re-run by the host, the historical double-booking hazard —
+    the host round loop, and the numpy oracle.  All booking flows through
+    the single ``_rewrite_program`` site, so the counters cannot diverge."""
+    from repro.core.rules import parse_program
+    from repro.core.terms import Dictionary
+
+    dic = Dictionary()
+    b, a = dic.intern(":b"), dic.intern(":a")  # b first: merge rep is b
+    prog = parse_program(["(?x, :anchored, :a) <- (?x, :q, :a)"], dic)
+    q = dic.id_of(":q")
+    u = dic.intern(":u")
+    for i in range(20):
+        dic.intern(f":pad{i}")
+    facts = np.asarray([[u, q, b]], np.int32)
+    delta = np.asarray([[a, 1, b]], np.int32)  # owl:sameAs merge a -> b
+
+    ref = materialise_rew(
+        np.concatenate([facts, delta]), prog, dic.n_resources
+    )
+    want = _packset(ref.triples())
+
+    booked = {}
+    for label, fuse in (("fused", True), ("host", False)):
+        eng = _engine(dic, cap=256, fuse_rounds=fuse)
+        st = eng.materialise_state(facts, prog)
+        before = (st.stats.rule_rewrites, st.stats.rules_requeued)
+        eng.add_facts(st, delta)
+        booked[label] = (st.stats.rule_rewrites - before[0],
+                         st.stats.rules_requeued - before[1])
+        assert _packset(eng.state_triples(st)) == want, label
+        # ... and the re-merge was evaluated anchored, not whole-rule
+        assert st.stats.remerge_targeted >= 1, label
+        assert st.stats.full_plan_evals == 0, label
+    assert booked["fused"] == booked["host"] == (
+        ref.stats.rule_rewrites, ref.stats.rules_requeued
+    ) == (1, 1)

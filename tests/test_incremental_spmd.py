@@ -225,6 +225,88 @@ def test_split_with_member_constant_head_restores_fact():
     assert state.stats.rederive_targeted >= 1
 
 
+# ---------------------------------------------------------------------------
+# targeted re-merge evaluation (ISSUE 8 tentpole)
+# ---------------------------------------------------------------------------
+
+def _merge_stream_events(dic):
+    """A deterministic update stream that repeatedly merges cliques which
+    rewrite rule constants: fresh :idProp edges join group 1 to group 0 and
+    group 3 to group 2 (each merge relabels the referenced member's
+    representative, so rho(P) changes), then the first edge pair is deleted
+    again (clique split — rho reverts, rewriting the rules back)."""
+    idp = dic.id_of(":idProp")
+    v1, v2 = dic.intern(":mergeval1"), dic.intern(":mergeval2")
+    ev1 = np.asarray(
+        [[dic.id_of(":e1_0"), idp, v1], [dic.id_of(":e0_0"), idp, v1]],
+        np.int32,
+    )
+    ev2 = np.asarray(
+        [[dic.id_of(":e3_0"), idp, v2], [dic.id_of(":e2_0"), idp, v2]],
+        np.int32,
+    )
+    return [("add", ev1), ("add", ev2), ("delete", ev1)]
+
+
+@pytest.mark.parametrize("fuse", [True, False], ids=["fused", "host_loop"])
+def test_remerge_targeted_no_full_plan_evals(fuse):
+    """The forward-side acceptance test mirroring ISSUE 5's delete-side one:
+    rho re-merges that rewrite rule constants are evaluated merge-anchored
+    (mplan) — NO unconstrained whole-rule evaluation on any maintenance
+    path — and the store stays oracle-equal after every event.  Asserted in
+    both the fused fixpoint and the host round loop."""
+    facts, prog, dic = generate(
+        n_groups=4, group_size=3, n_spokes_per=3, n_plain=20,
+        hierarchy_depth=1, const_rules=4, seed=0,
+    )
+    events = _merge_stream_events(dic)
+    eng = _engine(dic, cap=1 << 11, fuse_rounds=fuse)
+    state = eng.materialise_state(facts, prog)
+    # the BASE materialisation legitimately requeues whole rules (paper
+    # Algorithm 1 semantics, oracle counter parity) — the gate is on the
+    # maintenance stream's delta
+    base_full = state.stats.full_plan_evals
+    base_rw = state.stats.rule_rewrites
+    explicit = facts
+    for op, delta in events:
+        explicit = _apply(explicit, op, delta)
+        (eng.add_facts if op == "add" else eng.delete_facts)(state, delta)
+        _assert_state_matches_scratch(eng, state, explicit, prog, dic.n_resources)
+    st = state.stats
+    assert st.rule_rewrites - base_rw >= 2   # merges rewrote rho(P) repeatedly
+    assert st.remerge_targeted >= 2          # ... and were evaluated anchored
+    assert st.remerge_full_fallback == 0     # every changed atom had variables
+    assert st.full_plan_evals == base_full   # the ISSUE 8 invariant
+
+
+def test_remerge_head_only_change_needs_no_evaluation():
+    """A rule whose HEAD constant merges (body unchanged) needs no
+    re-evaluation at all: the sweep re-normalises stored heads, so the rule
+    is neither merge-anchored nor requeued — and the store is still right."""
+    dic = Dictionary()
+    a = dic.intern_many([f":a{i}" for i in range(3)])  # before the rules!
+    prog = parse_program([
+        "(?x, owl:sameAs, ?y) <- (?x, :idProp, ?v) & (?y, :idProp, ?v)",
+        "(?x, :flag, :a2) <- (?x, :q, ?y)",
+    ], dic)
+    idp, qq = dic.id_of(":idProp"), dic.id_of(":q")
+    v, s, t = dic.intern(":v"), dic.intern(":s"), dic.intern(":t")
+    facts = np.asarray([[s, qq, t]], np.int32)
+    eng = _engine(dic, cap=512)
+    state = eng.materialise_state(facts, prog)
+    base = (state.stats.remerge_targeted, state.stats.full_plan_evals)
+    # merge a2 into the {a0, a1} clique: rho rewrites ONLY rule 2's head
+    delta = np.asarray([[ai, idp, v] for ai in a], np.int32)
+    eng.add_facts(state, delta)
+    explicit = np.concatenate([facts, delta], axis=0)
+    _assert_state_matches_scratch(eng, state, explicit, prog, dic.n_resources)
+    assert state.stats.rule_rewrites >= 1
+    assert state.stats.remerge_targeted == base[0]  # nothing to evaluate
+    assert state.stats.full_plan_evals == base[1]
+    flag = dic.id_of(":flag")
+    assert [s, flag, min(a)] in eng.state_triples(state).tolist()
+
+
 _MODE_COMBOS = [
     (dict(n_groups=1, group_size=5, n_spokes_per=2, n_plain=8,
           hierarchy_depth=0), 3, "clique_ish"),
@@ -235,6 +317,11 @@ _MODE_COMBOS = [
     (dict(n_groups=2, group_size=3, n_spokes_per=1, n_plain=15,
           hierarchy_depth=1, hometown_groups=1, hometown_size=5), 9,
      "uobm_ish"),
+    # merge-heavy + entity-constant rules: update merges rewrite rho(P),
+    # so the differential also covers targeted vs whole-rule RE-MERGE
+    # evaluation (ISSUE 8), not just the delete-side rederive strategies
+    (dict(n_groups=4, group_size=3, n_spokes_per=2, n_plain=15,
+          hierarchy_depth=1, const_rules=4), 11, "merge_ish"),
 ]
 
 
@@ -249,6 +336,7 @@ def _run_mode_differential(gen_kw, seed, n_events=4, batch=8):
         for m in ("targeted", "requeue")
     }
     states = {m: e.materialise_state(facts, prog) for m, e in engines.items()}
+    base_full = {m: states[m].stats.full_plan_evals for m in engines}
     explicit = facts
     for i, (op, delta) in enumerate(events):
         explicit = _apply(explicit, op, delta)
@@ -262,6 +350,10 @@ def _run_mode_differential(gen_kw, seed, n_events=4, batch=8):
     # the strategies genuinely diverged in mechanism, not just in result
     if states["requeue"].stats.rederive_full_fallback:
         assert states["targeted"].stats.rederive_full_fallback == 0
+    # targeted mode NEVER evaluates a whole rule unconstrained during
+    # maintenance — neither for delete-side rederivation nor for rho
+    # re-merges (the base materialisation's requeues are excluded)
+    assert states["targeted"].stats.full_plan_evals == base_full["targeted"]
 
 
 @pytest.mark.parametrize(
@@ -297,6 +389,38 @@ if HAVE_HYPOTHESIS:
         _run_mode_differential(
             _MODE_COMBOS[combo][0], seed, n_events=n_events, batch=batch
         )
+
+
+# ---------------------------------------------------------------------------
+# delta-mask window fallback (ISSUE 8 satellite)
+# ---------------------------------------------------------------------------
+
+def test_delta_mask_fallback_sound_and_counted():
+    """Forcing the bounded delta window to overflow (``delta_window=1``)
+    makes every multi-row round fall back to all-True plan masks.  The
+    fallback used to be silent; now it books ``stats.delta_mask_fallbacks``
+    — and it stays SOUND, because all-True masks are a superset that skips
+    no plan, so the fixpoint remains oracle-equal after every event."""
+    facts, prog, dic = generate(
+        n_groups=2, group_size=3, n_spokes_per=2, n_plain=30,
+        hierarchy_depth=2, seed=0,
+    )
+    events = sample_update_stream(facts, dic, n_events=3, batch=8, seed=0)
+    eng = _engine(dic, cap=1 << 11, fuse_rounds=False, delta_window=1)
+    state = eng.materialise_state(facts, prog)
+    assert state.stats.delta_mask_fallbacks > 0  # base rounds overflowed
+    explicit = facts
+    for op, delta in events:
+        explicit = _apply(explicit, op, delta)
+        (eng.add_facts if op == "add" else eng.delete_facts)(state, delta)
+        _assert_state_matches_scratch(eng, state, explicit, prog, dic.n_resources)
+    # at the default window nothing overflows at this scale — the counter
+    # fires only on genuine degradation, not on healthy rounds
+    eng2 = _engine(dic, cap=1 << 11, fuse_rounds=False)
+    st2 = eng2.materialise_state(facts, prog)
+    for op, delta in events:
+        (eng2.add_facts if op == "add" else eng2.delete_facts)(st2, delta)
+    assert st2.stats.delta_mask_fallbacks == 0
 
 
 # ---------------------------------------------------------------------------
@@ -405,8 +529,20 @@ _MESH_SCRIPT = textwrap.dedent(
         return set(pack(np.asarray(x, np.int32).reshape(-1, 3)).tolist())
 
     facts, prog, dic = generate(n_groups=2, group_size=3, n_spokes_per=1,
-                                n_plain=15, hierarchy_depth=1, seed=3)
+                                n_plain=15, hierarchy_depth=1, const_rules=2,
+                                seed=3)
     events = sample_update_stream(facts, dic, n_events=4, batch=8, seed=3)
+    # deterministic merge-heavy tail: join the two const-rule entities
+    # themselves (the sampled deletes may have split them off their
+    # groups, so merging the groups' seeds is not enough) — rho rewrites
+    # rule 1's entity constant to the joint rep, then deleting the edge
+    # pair splits it back.  The ISSUE 8 full_plan_evals == 0 acceptance,
+    # asserted across the whole device matrix.
+    idp = dic.id_of(":idProp")
+    mv = dic.intern(":mv0")
+    merge = np.asarray([[dic.id_of(":e1_2"), idp, mv],
+                        [dic.id_of(":e0_2"), idp, mv]], np.int32)
+    events = events + [("add", merge), ("delete", merge)]
 
     finals = {}
     cells = [("m1", make_engine_mesh(1), None, "targeted", True),
@@ -423,6 +559,8 @@ _MESH_SCRIPT = textwrap.dedent(
                         route_cap=route_cap, seed_chunk=128,
                         rederive_mode=rmode, fuse_rounds=fuse)
         state = eng.materialise_state(facts, prog)
+        base_full = state.stats.full_plan_evals
+        base_rw = state.stats.rule_rewrites
         explicit = facts
         for op, delta in events:
             explicit = apply(explicit, op, delta)
@@ -431,6 +569,12 @@ _MESH_SCRIPT = textwrap.dedent(
             assert packset(eng.state_triples(state)) == packset(ref.triples()), (name, op)
             assert (eng.state_rep(state) == ref.rep).all(), (name, op)
         finals[name] = packset(eng.state_triples(state))
+        assert state.stats.rule_rewrites > base_rw, name  # the tail really merged
+        if rmode == "targeted":
+            assert state.stats.full_plan_evals == base_full, name
+            assert state.stats.remerge_targeted >= 1, name
+        else:
+            assert state.stats.full_plan_evals > base_full, name
     assert len({frozenset(v) for v in finals.values()}) == 1, sorted(finals)
     print("SPMD-INC-OK")
     """
