@@ -23,9 +23,12 @@ dispatch floor, machine-INdependent — ROADMAP's fused-fixpoint metric) by
 more than ``tolerance``.  Two baseline-independent axes ride along: the
 absolute ``DISPATCH_CEILINGS`` and ``full_plan_evals == 0`` on every
 profile's maintenance-stream counters (no unconstrained whole-rule
-evaluations — exact, deterministic).  The gate also reruns the jaxpr trace
-audit (``repro.analysis``) and fails on any invariant violation or
-dispatch cross-check problem.
+evaluations — exact, deterministic).  The committed BENCH_serve.json rows
+are gated too (``compare_serve``: ``busy_over_idle`` and
+``batched_speedup`` absolute bounds, clean serve dispatch audits, live
+closed-loop epochs) without re-paying the serve bench.  The gate also
+reruns the jaxpr trace audit (``repro.analysis``) and fails on any
+invariant violation or dispatch cross-check problem.
 """
 
 from __future__ import annotations
@@ -48,6 +51,28 @@ BASELINE = os.path.join(
 # counts (BENCH_incremental.json) with ~2x headroom for stream-shape
 # variation (capacity retries, requeued rounds riding the host body);
 # the host-loop engine (fuse_rounds=False) sits far above every ceiling.
+SERVE_BASELINE = os.path.join(
+    os.path.dirname(os.path.dirname(os.path.abspath(__file__))),
+    "BENCH_serve.json",
+)
+
+# Absolute bounds on the committed serving rows (BENCH_serve.json):
+#
+#   * ``busy_over_idle`` — the epoch-snapshot publication contract: a query
+#     admitted between maintenance phases costs what an idle query costs,
+#     because the snapshot build (device buffer swap + incremental rho
+#     refresh + host mirror) is charged to the barrier, never to the first
+#     read.  1.2 leaves room for scheduler noise at ms-scale latencies;
+#     the pre-refactor dbpedia_like artifact sat at 1.7.
+#   * ``batched_speedup`` — the vmapped shape-grouped drain must beat the
+#     scalar host drain by >= 3x on the shape-heavy profile (most triples
+#     per predicate, where per-query join overhead dominates).  Other
+#     profiles are reported but not pinned: at small served sizes the
+#     scalar path is already sub-ms and the ratio is noise.
+SERVE_BUSY_OVER_IDLE_MAX = 1.2
+SERVE_BATCHED_SPEEDUP_MIN = 3.0
+SERVE_SPEEDUP_PROFILES = ("dbpedia_like",)
+
 DISPATCH_CEILINGS: dict[str, float] = {
     "claros_like": 15.0,    # fused steady 7.5
     "dbpedia_like": 17.0,   # fused steady 8.2
@@ -171,6 +196,69 @@ def compare_incremental(
     return problems
 
 
+def compare_serve(
+    rows: list[dict],
+    busy_over_idle_max: float = SERVE_BUSY_OVER_IDLE_MAX,
+    batched_speedup_min: float = SERVE_BATCHED_SPEEDUP_MIN,
+    speedup_profiles: tuple[str, ...] = SERVE_SPEEDUP_PROFILES,
+) -> list[str]:
+    """Validate serving rows against the absolute serving bounds.
+
+    Pure (no benching, no I/O) so the tier-1 tests can pin its semantics;
+    ``check()`` feeds it the committed BENCH_serve.json rows — the gate
+    validates the committed *claims* rather than re-paying the serve bench:
+
+      * every row's ``busy_over_idle`` must stay ≤ ``busy_over_idle_max``
+        (the snapshot-publication attribution contract — reads never pay
+        the snapshot build);
+      * every ``speedup_profiles`` row's ``batched_speedup`` must reach
+        ``batched_speedup_min`` (and the row must exist at all — a dropped
+        profile must not read as a pass);
+      * any row carrying a non-empty ``audit_problems`` list fails (the
+        store's dispatch audit ran dirty when the row was generated);
+      * a closed-loop section that submitted updates but completed zero
+        epochs during/after the window fails — the threaded worker never
+        ran, so the latency numbers measured an idle store.
+    """
+    problems: list[str] = []
+    seen = set()
+    for r in rows:
+        name = r.get("dataset", "?")
+        seen.add(name)
+        boi = r.get("busy_over_idle")
+        if boi is None or boi > busy_over_idle_max:
+            problems.append(
+                f"{name}: busy_over_idle {boi} > {busy_over_idle_max} "
+                "(busy reads are paying maintenance/snapshot cost)"
+            )
+        if name in speedup_profiles:
+            spd = r.get("batched_speedup")
+            if spd is None or spd < batched_speedup_min:
+                problems.append(
+                    f"{name}: batched_speedup {spd} < {batched_speedup_min}"
+                )
+        if r.get("audit_problems"):
+            problems.append(
+                f"{name}: serve dispatch audit dirty: {r['audit_problems']}"
+            )
+        cl = r.get("closed_loop")
+        if cl is not None and cl.get("updates_submitted", 0) > 0 and not (
+            cl.get("epochs_completed", 0) > 0
+        ):
+            problems.append(
+                f"{name}: closed_loop completed 0 epochs for "
+                f"{cl['updates_submitted']} submitted updates "
+                "(worker never ran — latency row measured an idle store)"
+            )
+    for name in speedup_profiles:
+        if name not in seen:
+            problems.append(
+                f"{name}: missing from serve rows (batched_speedup gate "
+                "cannot run)"
+            )
+    return problems
+
+
 def check(tolerance: float = 0.2) -> int:
     """Run the incremental bench and gate it against the committed JSON,
     then rerun the jaxpr trace audit — both must be clean."""
@@ -185,6 +273,15 @@ def check(tolerance: float = 0.2) -> int:
     problems = compare_incremental(
         rows, baseline_doc, tolerance, dispatch_ceilings=DISPATCH_CEILINGS
     )
+
+    if os.path.exists(SERVE_BASELINE):
+        with open(SERVE_BASELINE) as fh:
+            serve_doc = json.load(fh)
+        problems += [
+            f"serve: {p}" for p in compare_serve(serve_doc.get("rows", []))
+        ]
+    else:
+        print(f"[check] no serve baseline at {SERVE_BASELINE}; skipping")
 
     from repro.analysis import run_report
 

@@ -129,6 +129,7 @@ def audit_engine(engine, state, passes=None) -> list[Violation]:
 
     from repro.core import incremental_spmd  # noqa: F401  (registers fns)
     from repro.core.engine_jax import AUDIT_REGISTRY
+    from repro.sparql import batched  # noqa: F401  (registers "bgp")
 
     passes = list(ALL_PASSES) if passes is None else list(passes)
     arena_rows = int(state.spo.shape[0])
@@ -153,6 +154,7 @@ def audited_fn_labels(engine, state) -> list[str]:
 
     from repro.core import incremental_spmd  # noqa: F401
     from repro.core.engine_jax import AUDIT_REGISTRY
+    from repro.sparql import batched  # noqa: F401
 
     labels = []
     with enable_x64():

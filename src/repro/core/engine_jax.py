@@ -1042,7 +1042,6 @@ class EngineState:
         return int(self.rep.shape[0])
 
 
-@dataclass(frozen=True)
 class StoreSnapshot:
     """Immutable, epoch-consistent read view of an :class:`EngineState`.
 
@@ -1050,15 +1049,62 @@ class StoreSnapshot:
     fixpoint completes, never mid-round — so a query evaluated against a
     snapshot observes exactly the fixpoint of maintenance epoch ``epoch``:
     no tombstoned-but-not-yet-rederived rows, no half-applied clique split.
-    ``triples`` is a host copy of the live normal-form store and ``rho`` the
-    frozen representative view whose clique tables are shared by every query
-    answered at this epoch (the serving contract of
+    ``rho`` is the frozen representative view whose clique tables are shared
+    by every query answered at this epoch (the serving contract of
     :mod:`repro.serve.triple_store`; docs/serving.md).
+
+    Two backing forms:
+
+      * **host** — ``triples`` is an eager host copy of the live
+        normal-form store (:meth:`JaxEngine.read_snapshot`, and the SPMD
+        path, build these);
+      * **device-resident** (:meth:`JaxEngine.publish_snapshot`) — the
+        live rows stay on the accelerator in TWO sorted orders: ``(s,p,o)``
+        packed-key order (``d_triples``/``d_keys``) and ``(p,o,s)`` order
+        (``d_triples_pos``/``d_keys_pos``), each padded to the arena width
+        with KEY_MAX keys behind the ``n_live`` live rows.  The batched
+        query executor (:mod:`repro.sparql.batched`) range-probes these
+        directly, so serving a query costs no device->host copy at all;
+        ``triples`` is materialised to host lazily, only when a
+        non-batchable query falls back to the host matcher.
+
+    Both forms are immutable: device arrays are never written after
+    publication (the double-buffer swap retires, never mutates, the
+    previous epoch's buffers) and the host copy is marked read-only.
     """
 
-    epoch: int
-    triples: np.ndarray
-    rho: FrozenRho
+    __slots__ = (
+        "epoch", "rho", "_triples", "n_live",
+        "d_triples", "d_keys", "d_triples_pos", "d_keys_pos",
+    )
+
+    def __init__(
+        self, epoch: int, rho: FrozenRho, triples: np.ndarray | None = None,
+        device: tuple | None = None,
+    ) -> None:
+        self.epoch = epoch
+        self.rho = rho
+        self._triples = triples
+        if device is not None:
+            (self.d_triples, self.d_keys, self.d_triples_pos,
+             self.d_keys_pos, self.n_live) = device
+        else:
+            self.d_triples = self.d_keys = None
+            self.d_triples_pos = self.d_keys_pos = None
+            self.n_live = None if triples is None else int(triples.shape[0])
+
+    @property
+    def on_device(self) -> bool:
+        return self.d_keys is not None
+
+    @property
+    def triples(self) -> np.ndarray:
+        """Host copy of the normal-form store (lazy for device snapshots)."""
+        if self._triples is None:
+            t = np.asarray(self.d_triples)[: self.n_live]
+            t.setflags(write=False)
+            self._triples = t
+        return self._triples
 
     @property
     def n_res(self) -> int:
@@ -1100,6 +1146,31 @@ def _rebuild_index(spo, epoch, marked):
     keys = jnp.where(live, _pack3(spo), KEY_MAX)
     perm = jnp.argsort(keys)
     return perm.astype(I32), keys[perm]
+
+
+def _publish_snapshot(spo, sort_perm, sorted_keys):
+    """Device-resident snapshot build — the per-barrier publication step.
+
+    Gathers the live rows through the persistent sorted index (one gather:
+    the ``(s,p,o)``-ordered view is the index itself) and derives the
+    secondary ``(p,o,s)``-ordered view with ONE argsort — the only sort the
+    publication pays, off the query path entirely (the NoArenaSort
+    exemption mirrors ``rebuild_index``: a deliberate, counted, per-epoch
+    cost — see docs/serving.md).  The two orders make every atom whose
+    bound positions prefix either ``(s,p,o)`` or ``(p,o,s)`` a contiguous
+    range probe for the batched query executor.  Returns
+    ``(tri, keys, tri_pos, keys_pos, n_live)``; padding rows carry KEY_MAX
+    keys behind the live prefix.
+    """
+    tri = spo[sort_perm]
+    live = sorted_keys < KEY_MAX
+    n_live = live.sum()
+    s = tri[:, 0].astype(jnp.int64)
+    p = tri[:, 1].astype(jnp.int64)
+    o = tri[:, 2].astype(jnp.int64)
+    pos_keys = jnp.where(live, (p << 42) | (o << 21) | s, KEY_MAX)
+    perm2 = jnp.argsort(pos_keys)
+    return tri, sorted_keys, tri[perm2], pos_keys[perm2], n_live
 
 
 def _squeeze_stream(cands, valid, *, target):
@@ -1761,6 +1832,54 @@ class JaxEngine:
         )
         state.stats.triples_unmarked = int(snap.triples.shape[0])
         return snap
+
+    def publish_snapshot(
+        self, state: EngineState, prev: StoreSnapshot | None = None,
+    ) -> StoreSnapshot:
+        """Device-resident epoch snapshot — the serving publication step.
+
+        Like :meth:`read_snapshot` this is only valid at an epoch barrier,
+        but instead of copying the live rows to host it keeps them on the
+        accelerator in the two sorted orders the batched query executor
+        range-probes (:func:`_publish_snapshot`); the host ``triples`` copy
+        is materialised lazily only if a host-path reader asks for it.
+        ``prev`` (the previously published snapshot) enables the
+        incremental :meth:`~repro.core.uf.FrozenRho.refreshed` rho refresh:
+        epochs that touched no clique reuse the entire expansion table.
+
+        Dispatches are tagged under the ``"publish"`` phase (an index
+        rebuild may ride along when the arena was re-laid-out this epoch).
+        Falls back to the host path under SPMD: per-shard sorted blocks
+        are not a globally sorted view, and the serving store is a
+        single-controller tier.
+        """
+        if self.n_shards != 1:
+            snap = self.read_snapshot(state)
+            if prev is not None:
+                snap.rho = prev.rho.refreshed(np.asarray(state.rep))
+            return snap
+        prev_phase = self.dispatches.phase
+        self.dispatches.phase = "publish"
+        try:
+            with enable_x64():
+                self._ensure_index(state)
+                key = ("snapshot", int(state.spo.shape[0]))
+                if key not in self._fns:
+                    self._register_fn(key, jax.jit(_publish_snapshot))
+                tri, keys, tri_pos, keys_pos, n_live = self._fns[key](
+                    state.spo, state.sort_perm, state.sorted_keys
+                )
+        finally:
+            self.dispatches.phase = prev_phase
+        rep_host = np.asarray(state.rep)
+        rho = prev.rho.refreshed(rep_host) if prev is not None \
+            else FrozenRho(rep_host)
+        n_live = int(n_live)
+        state.stats.triples_unmarked = n_live
+        return StoreSnapshot(
+            state.update_epoch, rho,
+            device=(tri, keys, tri_pos, keys_pos, n_live),
+        )
 
     def _recover_capacity(
         self, state: EngineState, snap: dict, err: CapacityError
@@ -2557,3 +2676,15 @@ def _audit_rebuild_index(engine, state):
     # stats.index_rebuilds) — exempt from NoArenaSort by design
     jx = jax.make_jaxpr(_rebuild_index)(state.spo, state.epoch, state.marked)
     yield "rebuild_index", jx
+
+
+@register_auditable("snapshot", skip_passes=("NoArenaSort",))
+def _audit_snapshot(engine, state):
+    # the per-barrier publication step of the serving tier: derives the
+    # secondary (p,o,s)-ordered snapshot view with one argsort — a counted
+    # per-epoch cost OFF the query path (docs/serving.md), exempt from
+    # NoArenaSort exactly like the index rebuild it mirrors
+    jx = jax.make_jaxpr(_publish_snapshot)(
+        state.spo, state.sort_perm, state.sorted_keys
+    )
+    yield "snapshot", jx

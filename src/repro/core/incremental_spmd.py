@@ -892,6 +892,14 @@ def static_dispatch_profile(program=None) -> dict:
         # only the recovery step itself (at most an index rebuild after a
         # re-layout) may dispatch here
         "retry": {"rebuild_index": 1},
+        # serving-tier phases (repro.serve / repro.sparql.batched).
+        # "publish" is the per-barrier snapshot publication: one snapshot
+        # build, plus an index rebuild riding along when the arena was
+        # re-laid-out this epoch.  "query" is batched BGP execution: one
+        # ``bgp`` dispatch per (shape, batch) group drained — the count per
+        # drain varies with the query mix, so it is admissible-unstated.
+        "publish": {"snapshot": 1, "rebuild_index": 1},
+        "query": {"bgp": None},
     }
 
 

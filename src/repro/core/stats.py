@@ -3,6 +3,7 @@
 from __future__ import annotations
 
 import dataclasses
+import threading
 from collections import Counter
 
 
@@ -17,24 +18,43 @@ class DispatchCounter:
     dispatch rates can be read net of compilation.  The static half lives
     in :func:`repro.core.incremental_spmd.static_dispatch_profile`;
     :func:`repro.analysis.dispatch_crosscheck` reconciles the two.
+
+    **Thread safety** (the serving tier runs maintenance on a worker thread
+    while reader threads dispatch batched query fns): ``phase`` is
+    *thread-local* — the maintenance generators' tags can never leak onto a
+    concurrent reader's ``"query"`` dispatches or vice versa — and the
+    counter increments take a lock so totals stay exact under concurrency
+    (a bare ``Counter[k] += 1`` is a read-modify-write that can drop
+    increments between threads).
     """
 
     def __init__(self) -> None:
         self.by_family: Counter = Counter()
         self.by_phase: Counter = Counter()   # keyed (phase, family)
         self.compiles: Counter = Counter()   # first-time cache fills
-        self.phase: str | None = None        # set by the phase generators
+        self._phase = threading.local()      # set by the phase generators
+        self._lock = threading.Lock()
+
+    @property
+    def phase(self) -> str | None:
+        return getattr(self._phase, "value", None)
+
+    @phase.setter
+    def phase(self, value: str | None) -> None:
+        self._phase.value = value
 
     @property
     def total(self) -> int:
         return sum(self.by_family.values())
 
     def record(self, family: str) -> None:
-        self.by_family[family] += 1
-        self.by_phase[(self.phase, family)] += 1
+        with self._lock:
+            self.by_family[family] += 1
+            self.by_phase[(self.phase, family)] += 1
 
     def record_compile(self, family: str) -> None:
-        self.compiles[family] += 1
+        with self._lock:
+            self.compiles[family] += 1
 
     def snapshot(self) -> dict:
         """Immutable totals for delta-ing around a timed region."""

@@ -178,7 +178,7 @@ class FrozenRho:
     handed to concurrent readers without defensive copies.
     """
 
-    __slots__ = ("rep", "_members", "_sizes")
+    __slots__ = ("rep", "_members", "_sizes", "_order", "_sorted_rep")
 
     def __init__(self, rep: np.ndarray) -> None:
         rep = compress_np(np.asarray(rep))
@@ -186,6 +186,8 @@ class FrozenRho:
         self.rep = rep
         self._members: dict[int, np.ndarray] | None = None
         self._sizes: np.ndarray | None = None
+        self._order: np.ndarray | None = None
+        self._sorted_rep: np.ndarray | None = None
 
     def __len__(self) -> int:
         return int(self.rep.shape[0])
@@ -206,3 +208,110 @@ class FrozenRho:
     def normalise(self, ids: np.ndarray) -> np.ndarray:
         """rho-normal form of an int index array (e.g. an (n, 3) batch)."""
         return self.rep[ids]
+
+    def _csr(self) -> tuple[np.ndarray, np.ndarray]:
+        # resources grouped by representative: members of rep r are the
+        # contiguous run order[searchsorted(sorted_rep, r, left:right)]
+        if self._order is None:
+            self._order = np.argsort(self.rep, kind="stable")
+            self._sorted_rep = self.rep[self._order]
+        return self._order, self._sorted_rep
+
+    def expand_ids(self, col: np.ndarray) -> tuple[np.ndarray, np.ndarray]:
+        """Vectorised clique expansion of a resource-id column.
+
+        Returns ``(row_idx, vals)``: each input row ``i`` contributes one
+        output row per member of ``col[i]``'s clique (``row_idx`` repeats
+        ``i``, ``vals`` holds the member ids).  An id that is nobody's
+        representative — including ids unseen by this rho — expands to
+        itself, matching the ``members.get(x, [x])`` singleton convention.
+        One searchsorted + gather pass instead of a Python loop over rows:
+        the executor's per-answer expansion cost for serving-size bags.
+        """
+        col = np.asarray(col)
+        if col.shape[0] <= 64 and self._members is not None:
+            # point-lookup answers: a handful of rows, members table already
+            # built (serving pre-warms it at publish) — a direct dict probe
+            # per row undercuts the fixed cost of the vectorised pass
+            ridx: list[int] = []
+            vlist: list[np.ndarray] = []
+            for i, x in enumerate(col.tolist()):
+                mem = self._members.get(x)
+                if mem is None:
+                    ridx.append(i)
+                    vlist.append(np.asarray([x]))
+                else:
+                    ridx.extend([i] * mem.shape[0])
+                    vlist.append(mem)
+            vals = (np.concatenate(vlist) if vlist
+                    else np.zeros(0, col.dtype))
+            return (np.asarray(ridx, dtype=np.int64),
+                    vals.astype(col.dtype, copy=False))
+        order, srep = self._csr()
+        starts = np.searchsorted(srep, col, side="left")
+        counts = np.searchsorted(srep, col, side="right") - starts
+        lone = counts == 0
+        counts = np.where(lone, 1, counts)
+        row_idx = np.repeat(np.arange(col.shape[0]), counts)
+        offs = np.concatenate([[0], np.cumsum(counts)])
+        within = np.arange(row_idx.shape[0]) - offs[row_idx]
+        gathered = order[
+            np.minimum(starts[row_idx] + within, order.shape[0] - 1)
+        ] if order.shape[0] else np.zeros(row_idx.shape[0], col.dtype)
+        vals = np.where(lone[row_idx], col[row_idx], gathered)
+        return row_idx, vals.astype(col.dtype, copy=False)
+
+    def refreshed(self, rep: np.ndarray) -> "FrozenRho":
+        """An epoch-over-epoch *incremental* refresh of the frozen view.
+
+        Serving publishes one FrozenRho per maintenance epoch, and most
+        epochs touch few (often zero) cliques, so rebuilding the clique
+        expansion tables from scratch — an argsort over every resource —
+        charges every epoch for work proportional to the whole resource
+        space.  ``refreshed`` compares ``rep`` against this view and:
+
+          * returns ``self`` when nothing changed (the common plain-add
+            epoch) — the cached ``members``/``sizes`` carry over for free;
+          * otherwise builds the successor view, recomputing members only
+            for the *affected* cliques (any clique that gained or lost a
+            member has some resource whose representative changed, so the
+            affected set is exactly the old+new representatives of the
+            changed resources, plus everything in a freshly interned tail);
+            untouched cliques keep their cached member arrays by reference.
+
+        ``sizes`` is always a fresh O(n) bincount — it is cheap and keeps
+        the invariant trivial.  Falls back to a plain rebuild when this
+        view's member table was never materialised (nothing to reuse).
+        """
+        rep = compress_np(np.asarray(rep))
+        n_old, n_new = self.rep.shape[0], rep.shape[0]
+        if n_new == n_old and np.array_equal(rep, self.rep):
+            return self
+        if self._members is None:
+            return FrozenRho(rep)
+        n = min(n_old, n_new)
+        changed = np.flatnonzero(rep[:n] != self.rep[:n])
+        affected = np.union1d(self.rep[changed], rep[changed])
+        if n_new > n:  # freshly interned resources and their merge targets
+            tail = np.arange(n, n_new)
+            affected = np.union1d(affected, np.union1d(tail, rep[tail]))
+        out = FrozenRho.__new__(FrozenRho)
+        rep.setflags(write=False)
+        out.rep = rep
+        out._sizes = None
+        out._order = None
+        out._sorted_rep = None
+        members = {
+            r: m for r, m in self._members.items() if r not in set(affected.tolist())
+        }
+        if affected.shape[0]:
+            sub = np.flatnonzero(np.isin(rep, affected.astype(rep.dtype)))
+            sr = rep[sub]
+            order = np.argsort(sr, kind="stable")
+            sub, sr = sub[order], sr[order]
+            bounds = np.flatnonzero(np.diff(sr)) + 1
+            for seg in np.split(sub, bounds):
+                if seg.shape[0] > 1:
+                    members[int(rep[seg[0]])] = np.sort(seg)
+        out._members = members
+        return out

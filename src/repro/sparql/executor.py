@@ -84,16 +84,13 @@ class _Solutions:
         self.strs = {v: [s[i] for i in idx] for v, s in self.strs.items()}
         self.mult = self.mult[idx]
 
-    def expand_var(self, v: int, members: dict[int, np.ndarray]) -> None:
+    def expand_var(self, v: int, rho: FrozenRho) -> None:
         """Replace each row by one row per clique member of row[v]."""
         if v in self.expanded or v not in self.cols:
             return
-        col = self.cols[v]
-        reps = [members.get(int(x), np.array([x])) for x in col]
-        counts = np.array([m.shape[0] for m in reps], dtype=np.int64)
-        idx = np.repeat(np.arange(col.shape[0]), counts)
+        idx, vals = rho.expand_ids(self.cols[v])
         self.take(idx)
-        self.cols[v] = np.concatenate(reps).astype(col.dtype) if reps else col
+        self.cols[v] = vals
         self.expanded.add(v)
 
 
@@ -114,17 +111,26 @@ def evaluate(
     a :class:`~repro.core.uf.FrozenRho` view.
     """
     rho = _rho_view(rep)
-    rep = rho.rep
-    members = rho.members
-    sizes = rho.sizes
-    qn = _normalise_query(q, rep)
-
+    qn = _normalise_query(q, rho.rep)
     sol = _Solutions(_match_bgp(qn.patterns, triples))
+    return _finish(q, qn, sol, rho, dic)
+
+
+def _finish(q: Query, qn: Query, sol: _Solutions, rho: FrozenRho, dic) -> Counter:
+    """Steps + projection + clique expansion over a matched solution table.
+
+    The tail of :func:`evaluate` after the BGP match — shared verbatim by
+    the host matcher and the batched device matcher
+    (:mod:`repro.sparql.batched`), so the two paths can only differ in how
+    the BGP solution rows were produced, never in the bag semantics layered
+    on top of them.
+    """
+    sizes = rho.sizes
 
     for step in qn.steps:
         if isinstance(step, Bind):
             # paper §5 Q2: expand *before* evaluating the builtin
-            sol.expand_var(step.src, members)
+            sol.expand_var(step.src, rho)
             names = [dic.lookup(int(x)) for x in sol.cols[step.src]]
             if step.fn == "STR":
                 out = [n.lstrip(":") for n in names]
@@ -136,7 +142,7 @@ def evaluate(
             sol.expanded.add(step.dst)
         elif isinstance(step, FilterEq):
             # comparisons see concrete resources: expand first
-            sol.expand_var(step.var, members)
+            sol.expand_var(step.var, rho)
             keep = np.flatnonzero(sol.cols[step.var] == step.value)
             sol.take(keep)
 
@@ -148,15 +154,33 @@ def evaluate(
     # expand retained resource vars (unexpanded ones only)
     for v in keep_vars:
         if v in sol.cols:
-            sol.expand_var(v, members)
+            sol.expand_var(v, rho)
 
-    out: Counter = Counter()
-    for i in range(sol.nrows):
-        key = tuple(
-            sol.strs[v][i] if v in sol.strs else dic.lookup(int(sol.cols[v][i]))
-            for v in keep_vars
-        )
-        out[key] += int(sol.mult[i])
+    if (not sol.strs and keep_vars and sol.nrows > 64
+            and all(v in sol.cols for v in keep_vars)):
+        # pure-resource answers with non-trivial bags: collapse duplicate
+        # rows and look names up once per distinct id instead of once per
+        # row — answer bags expand to clique x clique sizes, so the Python
+        # per-row loop was the dominant cost of a served scan query.  Small
+        # bags (point lookups) stay on the loop: its per-row cost undercuts
+        # the fixed np.unique(axis=0) setup below the cutoff
+        mat = np.stack([sol.cols[v] for v in keep_vars], axis=1)
+        uniq, inv = np.unique(mat, axis=0, return_inverse=True)
+        mults = np.zeros(uniq.shape[0], dtype=np.int64)
+        np.add.at(mults, inv, sol.mult)
+        names = {int(i): dic.lookup(int(i)) for i in np.unique(uniq)}
+        out = Counter()
+        for row, m in zip(uniq.tolist(), mults.tolist()):
+            out[tuple(names[x] for x in row)] = m
+    else:
+        out = Counter()
+        for i in range(sol.nrows):
+            key = tuple(
+                sol.strs[v][i] if v in sol.strs
+                else dic.lookup(int(sol.cols[v][i]))
+                for v in keep_vars
+            )
+            out[key] += int(sol.mult[i])
     if q.distinct:
         return Counter({k: 1 for k in out})
     return out
@@ -168,7 +192,8 @@ def evaluate_at(q: Query, snapshot, dic, naive: bool = False):
     ``snapshot`` is any object with ``triples`` (host copy of the live
     normal-form store at some completed maintenance epoch), ``rho`` (a
     :class:`~repro.core.uf.FrozenRho`) and ``epoch`` — canonically
-    :class:`repro.core.engine_jax.StoreSnapshot`.  Returns
+    :class:`repro.core.engine_jax.StoreSnapshot` (device-resident snapshots
+    materialise their host copy lazily on first access here).  Returns
     ``(answers, epoch)``: the executor never touches the live arena, so a
     maintenance operation in flight on the owning state cannot leak a
     mid-round store into the answer (the ``as_of_epoch`` contract of

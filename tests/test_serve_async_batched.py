@@ -1,0 +1,431 @@
+"""Async serving tier: batched execution, threaded scheduler, snapshots.
+
+Three differential contracts on top of tests/test_serve_triple_store.py's
+oracle (docs/serving.md):
+
+  * **batched == scalar == oracle** — the vmapped shape-grouped executor
+    (:mod:`repro.sparql.batched`) must return bag-identical answers to the
+    scalar host path (:func:`repro.sparql.executor.evaluate_at`) and to the
+    from-scratch REW materialisation, at every epoch, across workload
+    profiles and BGP shapes (including non-batchable shapes that fall back
+    to the host path);
+  * **threaded == cooperative** — the same seeded interleaved trace driven
+    through a ``threaded=True`` store (maintenance on the worker thread,
+    reads racing it from the caller) must land every answer on the oracle
+    at its reported epoch and end at the same final fixpoint as the
+    deterministic cooperative scheduler;
+  * **device snapshot == host snapshot** — ``publish_snapshot``'s
+    device-resident sorted orders must describe exactly the rows
+    ``read_snapshot`` copies to host.
+
+Plus unit coverage for the incremental :meth:`FrozenRho.refreshed`
+publication step, the store's dispatch audit staying clean under a mixed
+batched workload, and the pure ``compare_serve`` bench gate.
+"""
+
+import numpy as np
+import pytest
+
+from repro.core.engine_jax import JaxEngine
+from repro.core.materialise import materialise_rew
+from repro.core.triples import apply_op, pack
+from repro.core.uf import FrozenRho
+from repro.data.generator import generate, sample_update_stream
+from repro.serve.triple_store import TripleStore
+from repro.sparql import Query, evaluate
+from repro.sparql.batched import BatchedExecutor, build_plan, shape_signature
+from repro.sparql.executor import evaluate_at
+
+
+def _engine(dic, cap=1 << 11):
+    return JaxEngine(
+        dic.n_resources, capacity=cap, bind_cap=cap, out_cap=cap,
+        rewrite_cap=cap,
+    )
+
+
+def _packset(spo):
+    return set(pack(np.asarray(spo, np.int32).reshape(-1, 3)).tolist())
+
+
+_PROFILES = [
+    ("chain_like", dict(n_groups=2, group_size=3, n_spokes_per=1, n_plain=20,
+                        hierarchy_depth=1, chain_rules=True), 3),
+    ("clique_like", dict(n_groups=2, group_size=5, n_spokes_per=2, n_plain=10,
+                         hierarchy_depth=1), 5),
+    ("dbpedia_like", dict(n_groups=2, group_size=3, n_spokes_per=2, n_plain=60,
+                          hierarchy_depth=2, chain_rules=True), 7),
+]
+
+
+def _mixed_queries(facts, dic, n, seed):
+    """Generator shapes plus hand-built shapes the generator never emits:
+    a const-subject probe and an all-var atom (non-batchable: no bound
+    prefix in either key order -> host fallback)."""
+    qs = [
+        payload
+        for _op, payload in sample_update_stream(
+            facts, dic, n_events=n, batch=4, p_query=1.0, seed=seed
+        )
+    ]
+    s0, p0 = int(facts[0, 0]), int(facts[0, 1])
+    qs.append(Query([(s0, p0, -1)], [], [-1], False))
+    qs.append(Query([(-1, -2, -3)], [], [-1, -2], False))
+    return qs
+
+
+# ---------------------------------------------------------------------------
+# batched == scalar == from-scratch oracle, at every epoch
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize(
+    "gen_kw, seed", [(kw, s) for _n, kw, s in _PROFILES],
+    ids=[n for n, _kw, _s in _PROFILES],
+)
+def test_batched_matches_scalar_and_oracle_per_epoch(gen_kw, seed):
+    facts, prog, dic = generate(**gen_kw, seed=seed)
+    updates = sample_update_stream(facts, dic, n_events=3, batch=6, seed=seed)
+    store = TripleStore(facts, prog, dic, engine=_engine(dic))
+    bx = store._batched
+    queries = _mixed_queries(facts, dic, n=8, seed=seed + 1)
+
+    explicit = np.asarray(facts, np.int32)
+    for epoch_ops in [None] + updates:  # epoch 0, then one epoch per update
+        if epoch_ops is not None:
+            op, delta = epoch_ops
+            store.submit_update(op, delta)
+            store.drain()
+            explicit = apply_op(explicit, op, delta)
+        snap = store.snapshot
+        ref = materialise_rew(explicit, prog, dic.n_resources)
+        batched = bx.run(queries, snap, dic)
+        for q, (ans, ep) in zip(queries, batched):
+            assert ep == snap.epoch
+            assert (ans, ep) == evaluate_at(q, snap, dic), (
+                f"batched != scalar at epoch {snap.epoch} for {q.patterns}"
+            )
+            assert ans == evaluate(q, ref.triples(), ref.rep, dic), (
+                f"batched != oracle at epoch {snap.epoch} for {q.patterns}"
+            )
+    # the mixed list exercised BOTH paths: vmapped groups and host fallback
+    assert bx.stats["batched"] > 0 and bx.stats["fallback"] > 0
+
+
+def test_non_batchable_and_short_groups_fall_back():
+    facts, prog, dic = generate(
+        n_groups=1, group_size=3, n_spokes_per=1, n_plain=10,
+        hierarchy_depth=0, seed=0,
+    )
+    store = TripleStore(facts, prog, dic, engine=_engine(dic))
+    bx = store._batched
+    # all-var atom: no bound prefix in either order -> no plan
+    sig, _ = shape_signature(Query([(-1, -2, -3)], [], [-1], False).patterns)
+    assert build_plan(sig) is None
+    # a singleton group sits below min_batch -> scalar path, still correct
+    p0 = int(facts[0, 1])
+    q = Query([(-1, p0, -2)], [], [-1], False)
+    before = bx.stats["batched"]
+    (got,) = bx.run([q], store.snapshot, dic)
+    assert bx.stats["batched"] == before  # stayed on the host path
+    assert got == evaluate_at(q, store.snapshot, dic)
+
+
+def test_batched_overflow_falls_back_to_host():
+    """A per-query expansion wider than the vmap width must flag overflow
+    and be recomputed on the host path — never silently truncated."""
+    facts, prog, dic = generate(
+        n_groups=2, group_size=3, n_spokes_per=2, n_plain=60,
+        hierarchy_depth=1, seed=1,
+    )
+    store = TripleStore(
+        facts, prog, dic, engine=_engine(dic), query_width=4, min_batch=2
+    )
+    bx = store._batched
+    assert bx.width == 4
+    ps = np.unique(np.asarray(facts)[:, 1])
+    qs = [Query([(-1, int(p), -2)], [], [-1, -2], False) for p in ps[:4]]
+    got = bx.run(qs, store.snapshot, dic)
+    assert bx.stats["overflow"] > 0
+    for q, g in zip(qs, got):
+        assert g == evaluate_at(q, store.snapshot, dic)
+
+
+# ---------------------------------------------------------------------------
+# threaded scheduler == cooperative scheduler == oracle
+# ---------------------------------------------------------------------------
+
+def test_threaded_trace_matches_oracle_and_cooperative():
+    gen_kw = dict(n_groups=2, group_size=3, n_spokes_per=1, n_plain=20,
+                  hierarchy_depth=1)
+    seed = 11
+    facts, prog, dic = generate(**gen_kw, seed=seed)
+    trace = sample_update_stream(
+        facts, dic, n_events=8, batch=6, p_query=0.5, seed=seed
+    )
+
+    # threaded: maintenance on the worker, reads racing it from this thread
+    store_t = TripleStore(facts, prog, dic, engine=_engine(dic), threaded=True)
+    rng = np.random.default_rng(seed)
+    updates, queries = [], []
+    try:
+        for op, payload in trace:
+            if op == "query":
+                queries.append(store_t.submit_query(payload))
+            else:
+                updates.append(store_t.submit_update(op, payload))
+            if rng.random() < 0.6:  # race reads against in-flight epochs
+                store_t._drain_queries()
+        store_t.drain()
+        assert all(t.status == "done" for t in updates + queries)
+        assert store_t.epoch == len(updates)
+
+        # every answer must sit on the from-scratch oracle at its epoch
+        explicit_at = {0: np.asarray(facts, np.int32)}
+        for t in sorted(updates, key=lambda t: t.epoch):
+            explicit_at[t.epoch] = apply_op(
+                explicit_at[t.epoch - 1], t.op, t.delta
+            )
+        mats = {}
+
+        def mat(e):
+            if e not in mats:
+                mats[e] = materialise_rew(
+                    explicit_at[e], prog, dic.n_resources
+                )
+            return mats[e]
+
+        for t in queries:
+            ref = mat(t.epoch)
+            assert t.answer == evaluate(t.query, ref.triples(), ref.rep, dic)
+
+        # and the final fixpoint must equal the cooperative scheduler's
+        store_c = TripleStore(facts, prog, dic, engine=_engine(dic))
+        for op, payload in trace:
+            if op == "query":
+                store_c.submit_query(payload)
+            else:
+                store_c.submit_update(op, payload)
+        store_c.drain()
+        assert store_c.epoch == store_t.epoch
+        assert _packset(store_t.snapshot.triples) == _packset(
+            store_c.snapshot.triples
+        )
+        n = min(store_t.snapshot.rho.rep.shape[0],
+                store_c.snapshot.rho.rep.shape[0])
+        assert (store_t.snapshot.rho.rep[:n]
+                == store_c.snapshot.rho.rep[:n]).all()
+    finally:
+        store_t.close()
+
+
+def test_threaded_step_forbidden_and_close_idempotent():
+    facts, prog, dic = generate(
+        n_groups=1, group_size=3, n_spokes_per=1, n_plain=5,
+        hierarchy_depth=0, seed=0,
+    )
+    with TripleStore(facts, prog, dic, engine=_engine(dic), threaded=True) as s:
+        with pytest.raises(RuntimeError):
+            s.step()
+        t = s.submit_update("delete", facts[:1])
+        s.drain()
+        assert t.status == "done" and s.epoch == 1
+    s.close()  # second close is a no-op
+
+
+def test_threaded_failed_update_surfaces_on_caller():
+    facts, prog, dic = generate(
+        n_groups=1, group_size=3, n_spokes_per=1, n_plain=5,
+        hierarchy_depth=0, seed=0,
+    )
+    store = TripleStore(facts, prog, dic, engine=_engine(dic), threaded=True)
+    try:
+        orig, tripped = store._make_gen, []
+
+        def boom(t):
+            if not tripped:
+                tripped.append(True)
+                raise RuntimeError("injected maintenance failure")
+            return orig(t)
+
+        store._make_gen = boom
+        t = store.submit_update("delete", facts[:1])
+        with pytest.raises(RuntimeError, match="injected"):
+            store.drain()
+        assert t.status == "failed"
+        t2 = store.submit_update("delete", facts[:1])  # worker survived
+        store.drain()
+        assert t2.status == "done" and store.epoch == 1
+    finally:
+        store.close()
+
+
+# ---------------------------------------------------------------------------
+# snapshot layer: device-resident publication
+# ---------------------------------------------------------------------------
+
+def test_publish_snapshot_matches_read_snapshot():
+    facts, prog, dic = generate(
+        n_groups=2, group_size=3, n_spokes_per=2, n_plain=40,
+        hierarchy_depth=1, seed=5,
+    )
+    eng = _engine(dic)
+    state = eng.materialise_state(facts, prog)
+    dev = eng.publish_snapshot(state)
+    host = eng.read_snapshot(state)
+    assert dev.epoch == host.epoch
+    assert dev.on_device
+    assert _packset(dev.triples) == _packset(host.triples)
+    assert (dev.rho.rep == host.rho.rep).all()
+    # both device orders are genuinely sorted over the live prefix
+    keys = np.asarray(dev.d_keys)[: dev.n_live]
+    pos = np.asarray(dev.d_keys_pos)[: dev.n_live]
+    assert (np.diff(keys) >= 0).all() and (np.diff(pos) >= 0).all()
+    # and describe the same row set
+    tri_pos = np.asarray(dev.d_triples_pos)[: dev.n_live]
+    assert _packset(tri_pos) == _packset(dev.triples)
+
+
+def test_double_buffering_old_snapshot_survives_republication():
+    facts, prog, dic = generate(
+        n_groups=1, group_size=4, n_spokes_per=2, n_plain=10,
+        hierarchy_depth=0, seed=2,
+    )
+    store = TripleStore(facts, prog, dic, engine=_engine(dic))
+    snap0 = store.snapshot
+    before = _packset(snap0.triples)
+    k0 = np.asarray(snap0.d_keys).copy()
+    store.submit_update("delete", facts[:1])
+    store.drain()
+    snap1 = store.snapshot
+    assert snap1 is not snap0 and snap1.epoch == snap0.epoch + 1
+    # the retired buffer generation is untouched by the new publication
+    assert _packset(snap0.triples) == before
+    assert (np.asarray(snap0.d_keys) == k0).all()
+    assert _packset(snap1.triples) != before
+
+
+def test_frozen_rho_refreshed():
+    rep = np.arange(10, dtype=np.int32)
+    rep[3] = 1
+    rep[4] = 1  # clique {1, 3, 4}
+    r0 = FrozenRho(rep)
+    assert sorted(r0.members[1].tolist()) == [1, 3, 4]
+
+    # unchanged rep -> the very same object (cached tables carry over)
+    assert r0.refreshed(rep.copy()) is r0
+
+    # merge clique {1,3,4} with {7}: only the affected clique recomputes,
+    # untouched member arrays carry over by reference
+    rep2 = rep.copy()
+    rep2[7] = 1
+    r1 = r0.refreshed(rep2)
+    assert r1 is not r0
+    assert sorted(r1.members[1].tolist()) == [1, 3, 4, 7]
+    scratch = FrozenRho(rep2)
+    assert {k: v.tolist() for k, v in r1.members.items()} \
+        == {k: v.tolist() for k, v in scratch.members.items()}
+    assert not r1.rep.flags.writeable
+
+    # split: drop 4 from the clique; stale member arrays must not linger
+    rep3 = rep2.copy()
+    rep3[4] = 4
+    r2 = r1.refreshed(rep3)
+    assert sorted(r2.members[1].tolist()) == [1, 3, 7]
+    assert 4 not in r2.members
+
+    # interned tail: new resources merged straight into an old clique
+    rep4 = np.concatenate([rep3, np.asarray([1, 11], np.int32)])
+    r3 = r2.refreshed(rep4)
+    assert sorted(r3.members[1].tolist()) == [1, 3, 7, 10]
+    scratch4 = FrozenRho(rep4)
+    assert {k: v.tolist() for k, v in r3.members.items()} \
+        == {k: v.tolist() for k, v in scratch4.members.items()}
+
+    # a view whose members were never materialised rebuilds from scratch
+    r_cold = FrozenRho(rep)
+    assert sorted(r_cold.refreshed(rep2).members[1].tolist()) == [1, 3, 4, 7]
+
+
+# ---------------------------------------------------------------------------
+# dispatch audit stays clean under the mixed batched workload
+# ---------------------------------------------------------------------------
+
+def test_store_audit_clean_after_mixed_batched_workload():
+    facts, prog, dic = generate(
+        n_groups=2, group_size=3, n_spokes_per=1, n_plain=20,
+        hierarchy_depth=1, seed=3,
+    )
+    store = TripleStore(facts, prog, dic, engine=_engine(dic))
+    queries = _mixed_queries(facts, dic, n=6, seed=4)
+    for q in queries:
+        store.submit_query(q)
+    store.drain()
+    for op, delta in sample_update_stream(
+        facts, dic, n_events=2, batch=4, seed=3
+    ):
+        store.submit_update(op, delta)
+        for q in queries[:3]:
+            store.submit_query(q)
+        store.drain()
+    assert store._batched.stats["batched"] > 0
+    assert store.audit() == []
+    by_phase = store.engine.dispatches.by_phase
+    assert any(ph == "query" for ph, _fam in by_phase)
+    assert any(ph == "publish" for ph, _fam in by_phase)
+
+
+# ---------------------------------------------------------------------------
+# the pure compare_serve bench gate
+# ---------------------------------------------------------------------------
+
+def _serve_row(**over):
+    row = {
+        "dataset": "dbpedia_like",
+        "busy_over_idle": 1.05,
+        "batched_speedup": 4.2,
+        "audit_problems": [],
+        "closed_loop": {"updates_submitted": 4, "epochs_completed": 4},
+    }
+    row.update(over)
+    return row
+
+
+def test_compare_serve_gate():
+    from benchmarks.run import compare_serve
+
+    assert compare_serve([_serve_row()]) == []
+    # busy reads paying maintenance cost
+    assert any(
+        "busy_over_idle" in p
+        for p in compare_serve([_serve_row(busy_over_idle=1.7)])
+    )
+    # batched drain below the floor, but only on the pinned profile
+    assert any(
+        "batched_speedup" in p
+        for p in compare_serve([_serve_row(batched_speedup=2.0)])
+    )
+    assert compare_serve(
+        [_serve_row(), _serve_row(dataset="chain_like", batched_speedup=0.5)]
+    ) == []
+    # dropping the pinned profile must not read as a pass
+    assert any(
+        "missing" in p
+        for p in compare_serve([_serve_row(dataset="chain_like")])
+    )
+    # a dirty embedded audit fails the row
+    assert any(
+        "audit" in p
+        for p in compare_serve([_serve_row(audit_problems=["boom"])])
+    )
+    # a closed loop whose worker never completed an epoch measured idle air
+    assert any(
+        "closed_loop" in p
+        for p in compare_serve(
+            [_serve_row(closed_loop={"updates_submitted": 4,
+                                     "epochs_completed": 0})]
+        )
+    )
+    # missing fields fail loudly rather than passing silently
+    row = _serve_row()
+    del row["busy_over_idle"]
+    assert any("busy_over_idle" in p for p in compare_serve([row]))

@@ -388,6 +388,15 @@ def test_bench_serve_smoke(tmp_path):
     # maintenance epochs
     assert row["idle_query_ms"]["mean"] >= 0
     assert row["busy_query_ms"]["mean"] > 0
+    assert row["idle_query_ms"]["p99"] >= row["idle_query_ms"]["p50"]
+    # snapshot build cost is its own column (never inside query latency):
+    # construction + one entry per epoch barrier
+    assert row["snapshot_build_ms"]["mean"] > 0
+    assert row["batched_speedup"] > 0 and row["audit_problems"] == []
+    cl = row["closed_loop"]
+    assert cl["epochs_completed"] == cl["updates_submitted"] == 2
+    assert cl["achieved_qps"] > 0
+    assert cl["latency_ms"]["p99"] >= cl["latency_ms"]["p50"] >= 0
     import json
 
     doc = json.loads(out.read_text())
